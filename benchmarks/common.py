@@ -1,0 +1,27 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,44 @@
+"""Per-kernel microbenchmarks (CPU: interpret-mode correctness-scale
+timings; the numbers are for relative tracking, not TPU projections)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import csv_row, timed
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    s = 512 if full else 256
+
+    a = jnp.asarray(rng.standard_normal((s, s)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((s, s)), jnp.float32)
+    _, dt = timed(lambda: np.asarray(ops.block_gemm(a, b)))
+    _, dtr = timed(lambda: np.asarray(ref.gemm_ref(a, b)))
+    csv_row("kernel/block_gemm", dt * 1e6, f"ref_us={dtr*1e6:.0f} n={s}")
+
+    q = jnp.asarray(rng.standard_normal((1, s, 4, 64)), jnp.float32)
+    _, dt = timed(lambda: np.asarray(ops.flash_attention(q, q, q)))
+    _, dtr = timed(lambda: np.asarray(ref.flash_attention_ref(q, q, q)))
+    csv_row("kernel/flash_attention", dt * 1e6, f"ref_us={dtr*1e6:.0f} s={s}")
+
+    x = jnp.asarray(rng.standard_normal((s, 1024)), jnp.float32)
+    sc = jnp.ones((1024,), jnp.float32)
+    _, dt = timed(lambda: np.asarray(ops.rmsnorm(x, sc)))
+    csv_row("kernel/rmsnorm", dt * 1e6, f"rows={s}")
+
+    u = jnp.asarray(np.triu(rng.standard_normal((64, 64))) + 4 * np.eye(64),
+                    jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((s, 64)), jnp.float32)
+    _, dt = timed(lambda: np.asarray(ops.trsm(bm, u)))
+    csv_row("kernel/trsm", dt * 1e6, f"m={s} k=64")
+    return True
+
+
+if __name__ == "__main__":
+    run(full=True)

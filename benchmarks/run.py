@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure plus kernel and
+system microbenches. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` uses paper-scale matrices (minutes); default sizes finish in
+~2-4 minutes on one CPU core.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig5,fig8,fig9,kernels,"
+                         "selinv,treecomm")
+    args = ap.parse_args()
+
+    from . import (fig5_heatmap, fig8_scaling, fig9_ratio, kernels_bench,
+                   pselinv_bench, table1_volume, treecomm_bench)
+
+    benches = {
+        "table1": table1_volume.run,
+        "fig5": fig5_heatmap.run,
+        "fig8": fig8_scaling.run,
+        "fig9": fig9_ratio.run,
+        "kernels": kernels_bench.run,
+        "selinv": pselinv_bench.run,
+        "treecomm": treecomm_bench.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            benches[name](full=args.full)
+        except Exception as e:
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        for name, err in failed:
+            print(f"{name},FAILED,{err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

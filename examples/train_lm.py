@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred
+steps on CPU with the full substrate (data pipeline, AdamW, checkpoints,
+fault-tolerant loop).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Any assigned arch works via --arch (reduced to ~100M with --width).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models import get_model
+from repro.optim import adamw_init, adamw_update, cosine_warmup
+from repro.runtime.train_loop import TrainLoopConfig, run_train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--width", type=int, default=512)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    cfg = dataclasses.replace(
+        base, n_layers=args.layers, d_model=args.width,
+        n_heads=8, n_kv_heads=min(base.n_kv_heads, 4) or 4, head_dim=64,
+        d_ff=4 * args.width if base.d_ff else 0, vocab=8192,
+        n_experts=min(base.n_experts, 4), top_k=min(base.top_k, 2),
+        enc_layers=2 if base.enc_layers else 0,
+        layer_group=1 if not (base.attn_every or base.xlstm_pattern)
+        else base.layer_group, param_dtype="float32",
+        attn_every=min(base.attn_every, 2) if base.attn_every else 0)
+    if cfg.attn_every:
+        cfg = dataclasses.replace(cfg, n_layers=max(args.layers, 2),
+                                  layer_group=2, attn_every=2)
+    api = get_model(cfg)
+    params = api.init(jax.random.key(0))
+    nparams = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={nparams/1e6:.1f}M")
+    opt = adamw_init(params)
+
+    @jax.jit
+    def raw_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss(p, batch))(params)
+        lr = cosine_warmup(step, 3e-4, warmup=20, total=args.steps)
+        params, opt_state, mx = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, loss, mx
+
+    def step_fn(params, opt_state, batch, step):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.frontend == "vision":
+            b["frontend"] = jnp.ones(
+                (args.batch, cfg.n_frontend_tokens, cfg.d_model))
+        elif cfg.enc_layers:
+            b["frontend"] = jnp.ones((args.batch, args.seq, cfg.d_model))
+        return raw_step(params, opt_state, b, jnp.asarray(step))
+
+    pipe = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch)
+    out = run_train_loop(
+        step_fn, params, opt, pipe,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=50,
+                        ckpt_dir=args.ckpt, log_every=20))
+    first = sum(out["losses"][:10]) / 10
+    last = sum(out["losses"][-10:]) / 10
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"(stragglers={out['stragglers']}, restarts={out['restarts']})")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's technique inside LM training: manual data-parallel
+gradient sync with hierarchical *tree* cross-pod reduction vs flat psum —
+numerically identical, different collective schedule (HLO shown).
+
+Run with 8 host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/tree_gradient_sync.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.comm.hierarchical import hierarchical_allreduce
+from repro.core.trees import TreeKind
+from repro.launch.dryrun import collective_bytes
+
+
+def main():
+    devs = jax.devices()
+    if len(devs) < 8:
+        print("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    mesh = Mesh(np.array(devs[:8]).reshape(2, 4), ("pod", "data"))
+    w = jnp.ones((4096,)) * 0.1
+    x = jnp.arange(2.0 * 4 * 4096).reshape(2, 4, 4096) / 1e5
+
+    def loss(w, xb):
+        return jnp.sum(jnp.tanh(xb @ w))
+
+    def grads_tree(xb):
+        g = jax.grad(loss)(w, xb.reshape(1, -1))
+        # paper technique: reduce-scatter intra-pod, shifted-tree
+        # all-reduce across pods, all-gather intra-pod
+        g = hierarchical_allreduce(g, "pod", "data", npods=2, inner_size=4,
+                                   kind=TreeKind.SHIFTED, tag=0)
+        return g.reshape(1, 1, -1)
+
+    def grads_psum(xb):
+        g = jax.grad(loss)(w, xb.reshape(1, -1))
+        return jax.lax.psum(g, ("pod", "data")).reshape(1, 1, -1)
+
+    outs = {}
+    for name, f in (("tree", grads_tree), ("psum", grads_psum)):
+        jf = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", "data"),
+                                   out_specs=P("pod", "data")))
+        compiled = jf.lower(x).compile()
+        outs[name] = np.asarray(jf(x))
+        cb = collective_bytes(compiled.as_text())
+        print(f"{name:5s} collectives:",
+              {k: f"{v/1e3:.1f}KB" for k, v in cb.items()})
+    assert np.allclose(outs["tree"], outs["psum"], rtol=1e-6)
+    print("gradients identical: True")
+
+
+if __name__ == "__main__":
+    main()

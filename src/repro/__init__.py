@@ -1,0 +1,3 @@
+"""repro — tree-based asynchronous restricted collectives for parallel
+selected inversion (PSelInv), as a multi-pod JAX framework."""
+__version__ = "0.1.0"

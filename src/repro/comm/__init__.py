@@ -1,0 +1,11 @@
+"""repro.comm — tree-based restricted collectives as an executable JAX
+runtime feature (ppermute lowering of the paper's communication trees)."""
+from .treecomm import (tree_broadcast, tree_reduce, tree_allreduce,
+                       subset_broadcast, subset_reduce, batched_rounds)
+from .hierarchical import hierarchical_allreduce, cross_pod_tree_allreduce
+
+__all__ = [
+    "tree_broadcast", "tree_reduce", "tree_allreduce",
+    "subset_broadcast", "subset_reduce", "batched_rounds",
+    "hierarchical_allreduce", "cross_pod_tree_allreduce",
+]

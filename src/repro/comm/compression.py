@@ -1,0 +1,53 @@
+"""Gradient compression for the slow cross-pod stage.
+
+int8 block quantization with error feedback: the quantization residual is
+carried to the next step (standard EF-SGD construction), so compressed
+cross-pod reduction stays unbiased in the long run. Only the *inter-pod*
+stage compresses — intra-pod ICI is fast enough that compression would
+cost more in compute than it saves in bytes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress", "ef_restore"]
+
+_BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-block int8 quantization. x is flattened; returns
+    (q:int8 [n], scale:f32 [n/_BLOCK])."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress(grad: jnp.ndarray, error: jnp.ndarray):
+    """Error-feedback compression: quantize (grad + carried error), return
+    (q, scale, new_error)."""
+    target = grad + error
+    q, scale = quantize_int8(target)
+    approx = dequantize_int8(q, scale, grad.shape, grad.dtype)
+    return q, scale, target - approx
+
+
+def ef_restore(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype=jnp.float32):
+    return dequantize_int8(q, scale, shape, dtype)

@@ -1,0 +1,61 @@
+"""Hierarchical cross-pod collectives.
+
+TPU pods have the same two-level network inhomogeneity the paper fights
+on Cray XC30 (fast intra-pod ICI vs slow inter-pod DCN). Gradient
+reduction is split:
+
+    reduce-scatter (intra-pod, ICI)  →  tree all-reduce (inter-pod)
+       →  all-gather (intra-pod, ICI)
+
+so only ``1/pod_size`` of the gradient bytes cross the slow boundary.
+The inter-pod stage uses the paper's trees; when several gradient buckets
+reduce concurrently, each bucket gets a different shifted-tree rotation
+(``tag=bucket``) so the forwarding role rotates across pods — the exact
+load-balancing heuristic of the paper applied to cross-pod links.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.trees import TreeKind, build_tree
+from .treecomm import tree_allreduce
+
+__all__ = ["cross_pod_tree_allreduce", "hierarchical_allreduce"]
+
+
+def cross_pod_tree_allreduce(x, pod_axis: str, npods: int,
+                             kind: TreeKind = TreeKind.SHIFTED,
+                             tag: int = 0, root: int = 0):
+    """All-reduce across the pod axis via an explicit comm tree."""
+    if npods == 1:
+        return x
+    receivers = [p for p in range(npods) if p != root]
+    tree = build_tree(kind, root, receivers, tag=tag)
+    return tree_allreduce(x, pod_axis, tree)
+
+
+def hierarchical_allreduce(x, pod_axis: str, inner_axis: str, npods: int,
+                           inner_size: int,
+                           kind: TreeKind = TreeKind.SHIFTED,
+                           tag: int = 0):
+    """RS(intra) → tree-AR(inter) → AG(intra) over a 2-level mesh.
+
+    ``x`` must have a leading dim divisible by ``inner_size`` (gradient
+    buckets are flattened+padded by the optimizer wrapper). Must run
+    inside shard_map with both axes bound.
+    """
+    # 1. reduce-scatter within the pod: each inner rank ends with one
+    #    1/inner_size slice of the pod-local sum
+    scat = lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
+    # 2. cross-pod tree all-reduce on the slice; rotate the tree root by
+    #    (tag + inner rank) so concurrent buckets and different slice
+    #    owners spread the forwarding load over pods
+    root = (tag) % npods
+    scat = cross_pod_tree_allreduce(scat, pod_axis, npods, kind=kind,
+                                    tag=tag, root=root)
+    # 3. all-gather within the pod
+    return lax.all_gather(scat, inner_axis, axis=0, tiled=True)

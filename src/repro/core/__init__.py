@@ -1,0 +1,16 @@
+"""repro.core — the paper's contribution: supernodal selected inversion +
+tree-based asynchronous restricted collectives."""
+from .trees import (CommTree, TreeKind, build_tree, flat_tree, binary_tree,
+                    shifted_binary_tree, stable_hash)
+from .symbolic import BlockStructure, symbolic_factorize, partition_supernodes
+from .supernodal_lu import LUFactors, factorize, dense_lu_nopivot
+from .selinv import (selinv, selected_inverse, dense_selinv_oracle,
+                     compare_with_oracle)
+
+__all__ = [
+    "CommTree", "TreeKind", "build_tree", "flat_tree", "binary_tree",
+    "shifted_binary_tree", "stable_hash",
+    "BlockStructure", "symbolic_factorize", "partition_supernodes",
+    "LUFactors", "factorize", "dense_lu_nopivot",
+    "selinv", "selected_inverse", "dense_selinv_oracle", "compare_with_oracle",
+]

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot-spots: the supernodal GEMM/TRSM
+of selected inversion and the attention/norm hot paths of the LM stack.
+`ops` holds the jit'd public wrappers (interpret-mode on CPU), `ref` the
+pure-jnp oracles the tests compare against."""

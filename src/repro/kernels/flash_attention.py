@@ -1,0 +1,101 @@
+"""Flash-attention Pallas kernel (TPU target; interpret-mode validated).
+
+Online-softmax over KV tiles with running (m, l, acc) VMEM scratch.
+Grid: (batch·heads, q_tiles, kv_tiles) — the kv axis is the innermost
+(sequential) dimension so the scratch carries across it. Causal masking
+at element granularity inside the tile; fully-masked tiles are skipped
+with ``pl.when`` (no MXU work issued)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kv_tiles: int, bq: int, bk: int, causal: bool,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0]                                   # (bq, hd)
+        k = k_ref[0]                                   # (bk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_tiles - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q/k/v: (B, S, H, hd) with same H (repeat GQA outside).
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    assert k.shape == v.shape == (B, S, H, hd)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    scale = hd ** -0.5
+
+    # (B*H, S, hd) layout
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    grid = (B * H, S // bq, S // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_tiles=grid[2], bq=bq, bk=bk,
+                          causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

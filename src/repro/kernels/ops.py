@@ -1,0 +1,50 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes in Python/XLA for correctness validation. On a real
+TPU backend the same calls compile to Mosaic. ``REPRO_FORCE_INTERPRET=0``
+overrides the auto-detection."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .block_gemm import block_gemm_pallas
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .trsm import trsm_pallas
+
+__all__ = ["block_gemm", "block_gemm_acc", "flash_attention", "rmsnorm",
+           "trsm", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() == "cpu"
+
+
+def block_gemm(a, b):
+    return block_gemm_pallas(a, b, interpret=use_interpret())
+
+
+def block_gemm_acc(acc, a, b, alpha=-1.0):
+    """acc + alpha·(a@b) — the Schur-update form used by supernodal LU."""
+    return acc + block_gemm_pallas(a, b, alpha=alpha,
+                                   interpret=use_interpret())
+
+
+def flash_attention(q, k, v, causal=True):
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=use_interpret())
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=use_interpret())
+
+
+def trsm(b, u):
+    return trsm_pallas(b, u, interpret=use_interpret())

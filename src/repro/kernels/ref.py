@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gemm_ref", "gemm_acc_ref", "flash_attention_ref", "rmsnorm_ref",
+           "trsm_ref"]
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def gemm_acc_ref(acc, a, b, alpha=-1.0):
+    return acc + alpha * jnp.dot(a, b,
+                                 preferred_element_type=jnp.float32
+                                 ).astype(acc.dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q/k/v: (B, S, H, hd) — standard softmax attention oracle."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(q.dtype), v)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+            * scale.astype(x.dtype))
+
+
+def trsm_ref(b, u):
+    """Solve X·U = B with U upper triangular (right-side TRSM — the
+    selected-inversion normalization  L̂ = L·U⁻¹)."""
+    import jax.scipy.linalg as jla
+    return jla.solve_triangular(u.T, b.T, lower=True).T.astype(b.dtype)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel: one pass over row tiles, f32 statistics
+in VMEM, scale applied in the same tile visit (no second HBM read)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_pallas"]
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def rmsnorm_pallas(x, scale, eps: float = 1e-5, br: int = 256,
+                   interpret: bool = True):
+    """x: (rows, d); scale: (d,). Rows tiled; d stays whole in VMEM
+    (d ≤ ~16k fits comfortably)."""
+    rows, d = x.shape
+    br = min(br, rows)
+    pad = (-rows) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xp.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, scale)
+    return out[:rows]

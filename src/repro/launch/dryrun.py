@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+the production mesh built from 512 placeholder host devices, and record
+memory/cost/collective analysis for the roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+The XLA_FLAGS assignment above MUST stay before any other import (jax
+locks the device count at first init)."""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+
+from repro.config import SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                build_train_step)
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _split_computations(txt: str) -> Dict[str, str]:
+    blocks: Dict[str, list] = {}
+    cur = None
+    for line in txt.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([^\s(]+)\s*\(", line)
+            cur = m.group(1) if m else None
+            if cur:
+                blocks[cur] = []
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            blocks[cur].append(line)
+    return {k: "\n".join(v) for k, v in blocks.items()}
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([^\s,]+), body=%?([^\s,]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _computation_multipliers(txt: str) -> Dict[str, int]:
+    """Execution-count multiplier per HLO computation: while-loop bodies
+    execute trip-count times (xla's cost/temp analyses count them once —
+    verified; scan bodies would otherwise be undercounted). Trip count is
+    read from the loop-condition constant; nested loops multiply."""
+    blocks = _split_computations(txt)
+    mult: Dict[str, int] = {name: 1 for name in blocks}
+
+    edges = []  # (parent, body, trip)
+    for parent, body_txt in blocks.items():
+        for cond, body in _WHILE_RE.findall(body_txt):
+            consts = [int(c) for c in _CONST_RE.findall(blocks.get(cond, ""))]
+            trip = max(consts) if consts else 1
+            edges.append((parent, body, trip))
+
+    changed = True
+    while changed:                      # propagate through nesting
+        changed = False
+        for parent, body, trip in edges:
+            want = mult.get(parent, 1) * trip
+            if mult.get(body, 1) != want:
+                mult[body] = want
+                changed = True
+    return mult
+
+
+def _line_bytes(line: str, opname: str) -> int:
+    lhs_rhs = line.split("=", 1)[1]
+    head = lhs_rhs[:lhs_rhs.find(opname)]
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic from the optimized HLO: sum of
+    result-shape bytes of every collective op, weighted by the execution
+    count of its enclosing computation (while-loop bodies × trip count).
+    all-gather/all-to-all results count the full gathered buffer — an
+    upper bound within (n-1)/n of wire traffic."""
+    mult = _computation_multipliers(hlo_text)
+    blocks = _split_computations(hlo_text)
+    out: Dict[str, float] = {}
+    for name, body in blocks.items():
+        k = mult.get(name, 1)
+        for line in body.splitlines():
+            line = line.strip()
+            m = _COLL_RE.search(line)
+            if not m or "=" not in line:
+                continue
+            nbytes = _line_bytes(line, m.group(1))
+            if nbytes:
+                out[m.group(1)] = out.get(m.group(1), 0.0) + float(nbytes) * k
+    return out
+
+
+class CellTimeout(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             timeout_s: int = 1500) -> Dict:
+    import signal
+
+    def _alarm(signum, frame):
+        raise CellTimeout(f"{arch}×{shape_name} exceeded {timeout_s}s")
+
+    signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(timeout_s)
+    try:
+        return _run_cell(arch, shape_name, multi_pod)
+    finally:
+        signal.alarm(0)
+
+
+def _make_mesh(multi_pod: bool):
+    """Production mesh, or REPRO_DRYRUN_MESH="4x4" override for CI smoke
+    runs on a small host-device count."""
+    override = os.environ.get("REPRO_DRYRUN_MESH")
+    if override:
+        dims = tuple(int(d) for d in override.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        return jax.make_mesh(dims, axes)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def _run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports_shape(shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped", "reason": why}
+
+    mesh = _make_mesh(multi_pod)
+    builders = {"train": build_train_step, "prefill": build_prefill_step,
+                "decode": build_decode_step}
+    t0 = time.time()
+    fn, arg_shapes, in_sh, out_sh = builders[shape.mode](cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "ndev": mesh.devices.size,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1))
+        if cost else -1.0,
+        "collective_bytes": coll,
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "peak_memory_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    }
+    hbm = (result["memory"].get("argument_size_in_bytes", 0)
+           + result["memory"].get("temp_size_in_bytes", 0))
+    result["fits_16gb"] = bool(hbm < 16 * (1 << 30))
+    print(f"[dryrun] {arch} × {shape_name} × "
+          f"{'512(2pod)' if multi_pod else '256'}: OK "
+          f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+          f"flops={result['flops']:.3e})", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_configs():
+            for s in SHAPES:
+                cells.append((a, s, args.multi_pod))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["multi_pod"]) for r in results}
+
+    for arch, shape, mp in cells:
+        if (arch, shape, mp) in done:
+            continue
+        try:
+            r = run_cell(arch, shape, mp)
+        except Exception as e:
+            traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "multi_pod": mp,
+                 "status": "error", "error": repr(e)}
+        results.append(r)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

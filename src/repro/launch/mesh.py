@@ -1,0 +1,22 @@
+"""Production mesh construction (a function, not a constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi-pod adds a leading 2-pod axis
+    (2×16×16 = 512). Axis semantics: pod = cross-DCN data/FSDP, data =
+    intra-pod FSDP/DP, model = tensor parallel."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small host-device mesh for CI (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=prod(shape))."""
+    return jax.make_mesh(shape, axes)

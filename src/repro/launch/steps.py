@@ -1,0 +1,135 @@
+"""Step builders shared by train.py, serve.py and dryrun.py: given a
+(cfg, shape, mesh), produce the jitted step function + input specs +
+shardings — the single source of truth for what runs and how it shards."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch_specs
+from repro.models import get_model
+from repro.models.sharding_hooks import sharding_policy
+from repro.models import transformer as tfm
+from repro.optim import adamw_init, adamw_update, cosine_warmup
+from repro.runtime.sharding import (act_policy, batch_specs, cache_pspec,
+                                    param_specs)
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "input_specs"]
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    """ShapeDtypeStruct stand-ins for every input of the step that
+    ``shape.mode`` selects (weak-type-correct, shardable, no allocation)."""
+    api = get_model(cfg)
+    if shape.mode in ("train", "prefill"):
+        return {"batch": make_batch_specs(cfg, shape)}
+    # decode: one token + KV/state cache at seq_len
+    B, S = shape.global_batch, shape.seq_len
+    spec = api.cache_spec(B, S)
+
+    def to_sds(entry):
+        if isinstance(entry, dict):
+            return {k: jax.ShapeDtypeStruct(
+                v, tfm.cache_dtype(k, cfg)) for k, v in entry.items()}
+        return entry
+
+    if isinstance(spec, tuple):
+        cache = tuple(to_sds(e) for e in spec)
+    else:   # enc-dec: KV caches are bf16 (compute dtype)
+        cache = {k: jax.ShapeDtypeStruct(v, jnp.bfloat16)
+                 for k, v in spec.items()}
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _param_shardings(api, mesh):
+    shapes = api.param_shapes()
+    specs = param_specs(shapes, mesh)
+    return shapes, specs, _named(specs, mesh)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     peak_lr: float = 3e-4):
+    """Returns (train_step_fn, arg_shapes, in_shardings, out_shardings).
+    train_step(params, opt_state, batch, step) -> (params, opt, loss, mx)."""
+    api = get_model(cfg)
+    pshapes, pspecs, pshard = _param_shardings(api, mesh)
+    state_dtype = (jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+                   else jnp.float32)
+    oshapes = jax.eval_shape(
+        functools.partial(adamw_init, state_dtype=state_dtype), pshapes)
+    ospecs = param_specs(oshapes, mesh)   # m/v mirror params; step scalar
+    pol = act_policy(mesh)
+
+    def train_step(params, opt_state, batch, step):
+        with sharding_policy(pol):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss(p, batch))(params)
+        lr = cosine_warmup(step, peak_lr, warmup=2000, total=500_000)
+        params, opt_state, mx = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, loss, mx
+
+    bspecs = batch_specs(input_specs(cfg, shape, mesh)["batch"], mesh)
+    in_shardings = (pshard, _named(ospecs, mesh), _named(bspecs, mesh),
+                    NamedSharding(mesh, P()))
+    out_shardings = (pshard, _named(ospecs, mesh),
+                     NamedSharding(mesh, P()),
+                     {"grad_norm": NamedSharding(mesh, P())})
+    arg_shapes = (pshapes, oshapes,
+                  input_specs(cfg, shape, mesh)["batch"],
+                  jax.ShapeDtypeStruct((), jnp.int32))
+    return train_step, arg_shapes, in_shardings, out_shardings
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    api = get_model(cfg)
+    pshapes, pspecs, pshard = _param_shardings(api, mesh)
+    pol = act_policy(mesh)
+
+    def prefill_step(params, batch):
+        with sharding_policy(pol):
+            return api.prefill(params, batch)
+
+    ins = input_specs(cfg, shape, mesh)
+    bspecs = batch_specs(ins["batch"], mesh)
+    in_shardings = (pshard, _named(bspecs, mesh))
+    out_shardings = NamedSharding(mesh, P())
+    return prefill_step, (pshapes, ins["batch"]), in_shardings, out_shardings
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    api = get_model(cfg)
+    pshapes, pspecs, pshard = _param_shardings(api, mesh)
+    pol = act_policy(mesh)
+
+    def decode_step(params, token, pos, cache):
+        with sharding_policy(pol):
+            return api.decode_step(params, token, pos, cache)
+
+    ins = input_specs(cfg, shape, mesh)
+    cache_shardings = jax.tree_util.tree_map(
+        lambda sds: NamedSharding(mesh, cache_pspec(sds.shape, mesh)),
+        ins["cache"])
+    tok_shard = NamedSharding(
+        mesh, batch_specs({"t": ins["token"]}, mesh)["t"])
+    in_shardings = (pshard, tok_shard, tok_shard, cache_shardings)
+    out_shardings = (NamedSharding(mesh, P()), cache_shardings)
+    args = (pshapes, ins["token"], ins["pos"], ins["cache"])
+    return decode_step, args, in_shardings, out_shardings

@@ -1,0 +1,4 @@
+"""repro.models — model zoo covering the 10 assigned architectures."""
+from .registry import ModelAPI, get_model
+
+__all__ = ["ModelAPI", "get_model"]

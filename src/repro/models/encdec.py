@@ -1,0 +1,185 @@
+"""Encoder–decoder stack (seamless-m4t style): audio-frontend encoder
+(precomputed frame embeddings — modality stub per assignment) + causal
+text decoder with cross-attention."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn_mod
+from .layers import (cross_entropy, embed, init_embed, init_linear,
+                     init_mlp, init_rmsnorm, linear, mlp, rmsnorm)
+from .sharding_hooks import constrain
+from .transformer import param_dtype_of
+
+Params = Dict
+
+__all__ = ["init_encdec_params", "encdec_forward", "encdec_loss",
+           "encdec_cache_spec", "encdec_init_cache", "encdec_decode_step",
+           "encode"]
+
+
+def _init_enc_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn_mod.init_attention(k1, cfg, dtype),
+            "norm2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+
+def _init_dec_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_rmsnorm(cfg.d_model, dtype),
+            "self": attn_mod.init_attention(k1, cfg, dtype),
+            "normx": init_rmsnorm(cfg.d_model, dtype),
+            "cross": attn_mod.init_attention(k2, cfg, dtype),
+            "norm2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+
+def init_encdec_params(key, cfg) -> Params:
+    dtype = param_dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": init_embed(ks[2], cfg.vocab_padded, cfg.d_model, dtype),
+        "enc": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+        "norm_enc": init_rmsnorm(cfg.d_model, dtype),
+        "norm_f": init_rmsnorm(cfg.d_model, dtype),
+        "unembed": init_linear(ks[3], cfg.d_model, cfg.vocab_padded, dtype),
+    }
+
+
+def encode(p: Params, cfg, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) precomputed frontend embeddings."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = constrain(frames, "hidden")
+
+    def body(h, bp):
+        x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        h = h + attn_mod.attention(bp["attn"], cfg, x, positions,
+                                   causal=False)
+        x = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+        h = h + mlp(bp["ffn"], x, cfg.act)
+        return constrain(h, "hidden"), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, _ = lax.scan(body, h, p["enc"])
+    return rmsnorm(p["norm_enc"], h, cfg.norm_eps)
+
+
+def _cross_kv(bp, cfg, memory):
+    B, S, _ = memory.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = linear(bp["cross"]["wk"], memory).reshape(B, S, kv, hd)
+    v = linear(bp["cross"]["wv"], memory).reshape(B, S, kv, hd)
+    return k, v
+
+
+def encdec_forward(p: Params, cfg, tokens: jnp.ndarray,
+                   frames: jnp.ndarray, last_only: bool = False):
+    dtype = jnp.bfloat16   # compute dtype: bf16 everywhere (mixed precision)
+    memory = encode(p, cfg, frames.astype(dtype))
+    h = embed(p["embed"], tokens, dtype)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, bp):
+        x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        h = h + attn_mod.attention(bp["self"], cfg, x, positions)
+        x = rmsnorm(bp["normx"], h, cfg.norm_eps)
+        kv = _cross_kv(bp, cfg, memory)
+        h = h + attn_mod.attention(bp["cross"], cfg, x, positions,
+                                   kv_override=kv)
+        x = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+        h = h + mlp(bp["ffn"], x, cfg.act)
+        return constrain(h, "hidden"), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, _ = lax.scan(body, h, p["dec"])
+    if last_only:
+        h = h[:, -1:]
+    h = rmsnorm(p["norm_f"], h, cfg.norm_eps)
+    h = constrain(h, "pre_logits")
+    return constrain(linear(p["unembed"], h), "logits")
+
+
+def encdec_loss(p: Params, cfg, batch: Dict) -> jnp.ndarray:
+    logits = encdec_forward(p, cfg, batch["tokens"], batch["frontend"])
+    return cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# -- decode -------------------------------------------------------------------
+
+def encdec_cache_spec(cfg, batch: int, seq: int, enc_seq: int):
+    L = cfg.n_layers
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "self_k": (L, batch, seq, kv, hd),
+        "self_v": (L, batch, seq, kv, hd),
+        "cross_k": (L, batch, enc_seq, kv, hd),
+        "cross_v": (L, batch, enc_seq, kv, hd),
+    }
+
+
+def encdec_init_cache(p: Params, cfg, frames: jnp.ndarray, seq: int):
+    """Run the encoder and precompute cross KV (serving prefill)."""
+    memory = encode(p, cfg, frames.astype(jnp.bfloat16))
+    B = frames.shape[0]
+    dtype = memory.dtype
+
+    def per_layer(bp):
+        return _cross_kv(bp, cfg, memory)
+
+    ck, cv = lax.map(per_layer, p["dec"])
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "self_k": jnp.zeros((cfg.n_layers, B, seq, kv, hd), dtype),
+        "self_v": jnp.zeros((cfg.n_layers, B, seq, kv, hd), dtype),
+        "cross_k": ck, "cross_v": cv,
+    }
+
+
+def encdec_decode_step(p: Params, cfg, token: jnp.ndarray, pos: jnp.ndarray,
+                       cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    dtype = jnp.bfloat16   # compute dtype: bf16 everywhere (mixed precision)
+    h = embed(p["embed"], token[:, None], dtype)
+
+    def body(h, xs):
+        bp, sk, sv, ck, cv = xs
+        x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        y, sk, sv = attn_mod.decode_attention(bp["self"], cfg, x, pos, sk, sv)
+        h = h + y
+        x = rmsnorm(bp["normx"], h, cfg.norm_eps)
+        # cross attention: one query against the fixed encoder memory
+        B = x.shape[0]
+        q = linear(bp["cross"]["wq"], x).reshape(
+            B, 1, cfg.n_heads, cfg.hd)
+        if cfg.qk_norm:
+            q = rmsnorm(bp["cross"]["qnorm"], q, cfg.norm_eps)
+        G = cfg.n_heads // cfg.n_kv_heads
+        qr = q.reshape(B, cfg.n_kv_heads, G, cfg.hd) * cfg.hd ** -0.5
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, ck).astype(jnp.float32)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        y = jnp.einsum("bkgs,bskd->bkgd", w, cv).reshape(
+            B, 1, cfg.n_heads * cfg.hd)
+        h = h + linear(bp["cross"]["wo"], y)
+        x = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+        h = h + mlp(bp["ffn"], x, cfg.act)
+        return h, (sk, sv)
+
+    h, (sk, sv) = lax.scan(
+        body, h, (p["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache, self_k=sk, self_v=sv)
+    h = rmsnorm(p["norm_f"], h, cfg.norm_eps)
+    logits = linear(p["unembed"], h)[:, 0]
+    return logits, cache

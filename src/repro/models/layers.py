@@ -1,0 +1,102 @@
+"""Shared model layers (pure-functional JAX; params are plain dict trees)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "init_rmsnorm", "init_linear", "linear", "rope_freqs",
+           "apply_rope", "init_mlp", "mlp", "init_embed", "embed",
+           "cross_entropy"]
+
+Params = Dict
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+    w = (w / jnp.sqrt(d_in)).astype(dtype)
+    return {"w": w}
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, d, f, dtype),
+         "down": init_linear(k2, f, d, dtype)}
+    if act == "silu":                       # SwiGLU
+        p["gate"] = init_linear(k3, d, f, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = linear(p["up"], x)
+    if act == "silu":
+        up = jax.nn.silu(linear(p["gate"], x)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return linear(p["down"], up)
+
+
+# -- embedding / unembedding ---------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> Params:
+    e = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"table": e.astype(dtype)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean CE, shard-safe over a vocab-partitioned logits tensor:
+    the gold logit is a masked reduction (iota==label fuses; no gather
+    across the sharded vocab axis, no full f32 log-prob tensor)."""
+    V = logits.shape[-1]
+    lmax = jax.lax.stop_gradient(
+        jnp.max(logits, axis=-1, keepdims=True)).astype(jnp.float32)
+    shifted = logits.astype(jnp.float32) - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot_mask = labels[..., None] == jnp.arange(V, dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot_mask, shifted, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

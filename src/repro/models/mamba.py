@@ -1,0 +1,138 @@
+"""Mamba (S6) block for the Jamba hybrid — selective SSM with associative
+scan over the sequence (TPU-native: `lax.associative_scan` instead of the
+CUDA selective-scan kernel), plus O(1)-state single-token decode."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import init_linear, linear
+
+Params = Dict
+
+__all__ = ["init_mamba", "mamba", "mamba_decode", "mamba_state_spec"]
+
+
+def init_mamba(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "x_proj": init_linear(ks[2], di, ds * 2 + 1, dtype),   # B, C, dt
+        "dt_bias": jnp.zeros((di,), dtype=dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1., ds + 1.)[None, :], (di, 1))
+                         ).astype(jnp.float32),
+        "D": jnp.ones((di,), dtype=dtype),
+        "out_proj": init_linear(ks[3], di, d, dtype),
+    }
+
+
+_MAMBA_CHUNK = 128
+
+
+def _ssm_scan(u, dt, A, Bc, Cc, chunk: int = _MAMBA_CHUNK):
+    """u: (B,S,di); dt: (B,S,di); A: (di,ds); Bc/Cc: (B,S,ds).
+    h_t = exp(dt·A) h_{t-1} + dt·B_t u_t ;  y_t = C_t·h_t.
+
+    Chunked: the (B, L, di, ds) gate/update tensors exist only per chunk
+    (transient, rematerialized in backward); the cross-chunk carry is the
+    (B, di, ds) state — without this, a 72-layer Jamba at 4k×256 would
+    materialize petabytes."""
+    B, S, di = u.shape
+    ds = Bc.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+
+    def chunk_body(h0, inp):
+        uc, dtc, bc, cc = inp                       # (B,L,·)
+        dA = jnp.exp(dtc[..., None] * (-jnp.exp(A))[None, None])
+        dBu = (dtc * uc)[..., None] * bc[..., None, :]   # (B,L,di,ds)
+
+        def combine(a, b):
+            (ga, xa), (gb, xb) = a, b
+            return ga * gb, xb + gb * xa
+
+        cum_dA, h_intra = lax.associative_scan(combine, (dA, dBu), axis=1)
+        h = h_intra + cum_dA * h0[:, None]
+        y = jnp.einsum("bsdn,bsn->bsd", h, cc)
+        return h[:, -1], y
+
+    xs = tuple(x.reshape(B, nc, L, -1).swapaxes(0, 1)
+               for x in (u, dt, Bc, Cc))
+    h0 = jnp.zeros((B, di, ds), u.dtype)
+    _, ys = lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    return ys.swapaxes(0, 1).reshape(B, S, di)
+
+
+def mamba(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence forward. x: (B,S,D)."""
+    B, S, D = x.shape
+    di = cfg.mamba_expand * D
+    dc = cfg.mamba_d_conv
+    xz = linear(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)                          # (B,S,di)
+
+    # depthwise causal conv1d
+    pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+               for i in range(dc))
+    u = jax.nn.silu(conv)
+
+    bcd = linear(p["x_proj"], u)
+    ds = cfg.mamba_d_state
+    Bc, Cc, dt = bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., 2 * ds:]
+    # scalar selective dt per position, per-channel learned bias
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, None, :])
+    y = _ssm_scan(u.astype(jnp.float32), dt, p["A_log"],
+                  Bc.astype(jnp.float32), Cc.astype(jnp.float32))
+    y = y.astype(x.dtype) + u * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def mamba_state_spec(cfg, batch: int):
+    """State carried across decode steps: SSM state + conv window."""
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "ssm": (batch, di, cfg.mamba_d_state),
+        "conv": (batch, cfg.mamba_d_conv - 1, di),
+    }
+
+
+def mamba_decode(p: Params, cfg, x: jnp.ndarray, state: Dict
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step. x: (B,1,D)."""
+    B, _, D = x.shape
+    di = cfg.mamba_expand * D
+    dc = cfg.mamba_d_conv
+    ds = cfg.mamba_d_state
+    xz = linear(p["in_proj"], x)[:, 0]
+    u, z = jnp.split(xz, 2, axis=-1)                          # (B,di)
+
+    win = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,dc,di)
+    conv = jnp.einsum("bcd,cd->bd", win, p["conv_w"].astype(x.dtype))
+    u = jax.nn.silu(conv)
+
+    bcd = u @ p["x_proj"]["w"].astype(x.dtype)
+    Bc, Cc, dt = bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., 2 * ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, :])
+    dA = jnp.exp(dt[..., None] * (-jnp.exp(p["A_log"]))[None])   # (B,di,ds)
+    h = state["ssm"] * dA + (dt * u.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y.astype(x.dtype) + u * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"]["w"].astype(x.dtype))[:, None]
+    return out, {"ssm": h, "conv": win[:, 1:]}

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (TPU-native: static
+shapes, scatter/gather — no dynamic ragged ops).
+
+Expert weights are 2-D sharded (FSDP over `data` on d_model, TP over
+`model` on d_ff); dispatch/combine use scatter/gather per token so compiled
+FLOPs stay O(tokens · top_k · expert_ffn) rather than the quadratic
+one-hot-einsum formulation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+Params = Dict
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": init_linear(ks[0], d, e, jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / jnp.sqrt(f)).astype(dtype),
+    }
+    return p
+
+
+def moe_ffn(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (y, aux_loss). Top-k routing with per-expert capacity
+    C = ceil(T_local·k/E · capacity_factor); overflow tokens are dropped
+    (standard Switch/MTF semantics).
+
+    Dispatch is *grouped by data shard* (G = data-axis size): each group
+    scatters only its local tokens into its own (E, C, D) buffer — no
+    cross-shard scatter, so the dispatched-activation buffer shards over
+    the data axis, and over the model axis too via expert parallelism
+    when E divides it (see runtime.sharding)."""
+    from .sharding_hooks import constrain, policy_info
+
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = policy_info("data_groups", 1)
+    if T % G:
+        G = 1
+    Tl = T // G
+    cap = int((Tl * k) / E * cfg.capacity_factor) + 1
+
+    xt = x.reshape(G, Tl, D)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                          # (G,Tl,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style), over all tokens
+    me = probs.mean((0, 1))                                      # (E,)
+    ce = jnp.zeros((E,)).at[ids.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert, per group
+    flat_ids = ids.reshape(G, Tl * k)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)        # (G,Tl*k,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_ids[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    dpos = jnp.where(keep, pos, cap)                 # overflow -> drop slot
+
+    # index-map dispatch: scatter only int32 slot->token indices (tiny),
+    # then move rows by gather — the D-wide row scatter would otherwise
+    # be replicated across the model axis by the SPMD partitioner.
+    Tk = Tl * k
+    def imap_group(e_ids, p_ids):
+        return jnp.full((E, cap + 1), Tk, jnp.int32).at[
+            e_ids, p_ids].set(jnp.arange(Tk, dtype=jnp.int32))
+
+    imap = jax.vmap(imap_group)(flat_ids, dpos)          # (G,E,cap+1)
+    slot2tok = imap[:, :, :cap] // k                     # (G,E,cap) ∈ [0,Tl]
+    # (the // k maps (token,choice) slots to token rows; the Tk sentinel
+    # maps to the zero padding row Tl — never materialize repeat(x, k))
+    xt_pad = jnp.concatenate(
+        [xt, jnp.zeros((G, 1, D), x.dtype)], axis=1)     # (G,Tl+1,D)
+    eb = jax.vmap(lambda s, m: s[m])(xt_pad, slot2tok)   # (G,E,cap,D)
+    eb = constrain(eb, "moe_dispatch")
+
+    # expert computation (SwiGLU), expert-parallel when E | model axis
+    up = jnp.einsum("gecd,edf->gecf", eb, p["w_up"].astype(x.dtype))
+    g = jnp.einsum("gecd,edf->gecf", eb, p["w_gate"].astype(x.dtype))
+    h = constrain(jax.nn.silu(g) * up, "moe_ffn_act")
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    out = constrain(out, "moe_dispatch")
+
+    # combine: weight each slot by its gate, then scatter-add straight
+    # into token rows (commutative add => the partitioner keeps updates
+    # expert-local and psums over the model axis — no expert-buffer
+    # all-gather, no (tokens·k, D) intermediate)
+    gate_pad = jnp.concatenate(
+        [gate.reshape(G, Tk), jnp.zeros((G, 1), gate.dtype)], axis=1)
+    gate_of_slot = jax.vmap(lambda g0, m: g0[m])(
+        gate_pad, imap[:, :, :cap])                      # (G,E,cap)
+    out = out * gate_of_slot[..., None].astype(x.dtype)
+
+    def combine_group(o, m):
+        return jnp.zeros((Tl + 1, D), x.dtype).at[m.reshape(-1)].add(
+            o.reshape(E * cap, D))
+
+    y = jax.vmap(combine_group)(out, slot2tok)[:, :Tl]   # (G,Tl,D)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,70 @@
+"""Model registry: uniform init/forward/loss/decode entry points per
+family, so the launcher and dry-run treat every arch identically."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_mod
+from . import transformer as tfm
+
+__all__ = ["ModelAPI", "get_model"]
+
+
+class ModelAPI:
+    """Family-dispatched model functions (all pure)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_encdec = cfg.enc_layers > 0
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        if self.is_encdec:
+            return encdec_mod.init_encdec_params(key, self.cfg)
+        return tfm.init_params(key, self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        if self.is_encdec:
+            return encdec_mod.encdec_loss(params, self.cfg, batch)
+        return tfm.lm_loss(params, self.cfg, batch)
+
+    # -- prefill (forward, last-position logits) ----------------------------
+    def prefill(self, params, batch: Dict) -> jnp.ndarray:
+        if self.is_encdec:
+            return encdec_mod.encdec_forward(
+                params, self.cfg, batch["tokens"], batch["frontend"],
+                last_only=True)
+        logits, _ = tfm.lm_forward(params, self.cfg, batch["tokens"],
+                                   frontend=batch.get("frontend"),
+                                   last_only=True)
+        return logits
+
+    # -- decode ---------------------------------------------------------------
+    def cache_spec(self, batch: int, seq: int):
+        if self.is_encdec:
+            return encdec_mod.encdec_cache_spec(self.cfg, batch, seq,
+                                                enc_seq=seq)
+        return tfm.cache_spec(self.cfg, batch, seq)
+
+    def init_cache(self, batch: int, seq: int):
+        if self.is_encdec:
+            raise NotImplementedError(
+                "enc-dec cache needs encoder output; use encdec_init_cache")
+        return tfm.init_cache(self.cfg, batch, seq)
+
+    def decode_step(self, params, token, pos, cache):
+        if self.is_encdec:
+            return encdec_mod.encdec_decode_step(params, self.cfg, token,
+                                                 pos, cache)
+        return tfm.lm_decode_step(params, self.cfg, token, pos, cache)
+
+
+def get_model(cfg) -> ModelAPI:
+    return ModelAPI(cfg)

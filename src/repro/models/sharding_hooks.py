@@ -1,0 +1,43 @@
+"""Sharding-constraint hooks: models stay mesh-agnostic; the launcher
+installs a policy that maps logical names -> PartitionSpec."""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_STATE = threading.local()
+
+
+def constrain(x, name: str):
+    """Apply the active policy's sharding constraint for logical tensor
+    ``name`` (e.g. "hidden", "logits", "kv_cache"). No-op without policy."""
+    pol: Optional[Callable] = getattr(_STATE, "policy", None)
+    if pol is None:
+        return x
+    spec = pol(name, x)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def policy_info(key: str, default=None):
+    """Mesh facts exposed by the active policy (e.g. data-shard count for
+    the MoE grouped dispatch). Returns ``default`` with no policy."""
+    pol = getattr(_STATE, "policy", None)
+    info = getattr(pol, "info", None) if pol is not None else None
+    if info is None:
+        return default
+    return info.get(key, default)
+
+
+@contextlib.contextmanager
+def sharding_policy(policy: Callable):
+    prev = getattr(_STATE, "policy", None)
+    _STATE.policy = policy
+    try:
+        yield
+    finally:
+        _STATE.policy = prev

@@ -1,0 +1,314 @@
+"""Decoder-only LM assembly covering every assigned family:
+
+* dense / MoE transformers (GQA, RoPE, qk-norm),
+* hybrid Mamba+attention (Jamba: attention every ``attn_every`` layers,
+  MoE every ``moe_every``),
+* xLSTM stacks (mLSTM/sLSTM pattern),
+* VLM/audio frontends as precomputed-embedding stubs,
+* encoder-decoder (see :mod:`repro.models.encdec`).
+
+Layers are scanned in *groups* (``cfg.layer_group`` consecutive layers per
+scan step — the group is the smallest period of the layer pattern), with
+params stacked over groups: compile time is O(group), not O(n_layers).
+``cfg.remat`` wraps the group body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import xlstm as xlstm_mod
+from .layers import (cross_entropy, embed, init_embed, init_linear,
+                     init_mlp, init_rmsnorm, linear, mlp, rmsnorm)
+from .sharding_hooks import constrain
+
+Params = Dict
+
+__all__ = ["layer_kinds", "init_params", "lm_forward", "lm_loss",
+           "init_cache", "cache_spec", "lm_decode_step", "param_dtype_of"]
+
+
+def param_dtype_of(cfg):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg) -> List[str]:
+    kinds = []
+    for l in range(cfg.n_layers):
+        if cfg.xlstm_pattern:
+            kinds.append("mlstm" if cfg.xlstm_pattern[
+                l % len(cfg.xlstm_pattern)] == "m" else "slstm")
+            continue
+        if cfg.attn_every and (l % cfg.attn_every) != cfg.attn_every // 2:
+            mixer = "mamba"
+        else:
+            mixer = "attn"
+        if cfg.n_experts and (l % cfg.moe_every) == cfg.moe_every - 1:
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        kinds.append(f"{mixer}+{ffn}")
+    return kinds
+
+
+def _group_kinds(cfg) -> List[str]:
+    kinds = layer_kinds(cfg)
+    g = cfg.layer_group
+    assert cfg.n_layers % g == 0
+    per_group = [kinds[i * g:(i + 1) * g] for i in range(cfg.n_layers // g)]
+    assert all(pg == per_group[0] for pg in per_group), \
+        "layer pattern must be periodic with period layer_group"
+    return per_group[0]
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, kind: str) -> Params:
+    dtype = param_dtype_of(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": init_rmsnorm(d, dtype)}
+    if kind == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(k1, cfg, dtype)
+        return p
+    if kind == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(k1, cfg, dtype)
+        return p
+    mixer, ffn = kind.split("+")
+    if mixer == "attn":
+        p["mixer"] = attn_mod.init_attention(k1, cfg, dtype)
+    else:
+        p["mixer"] = mamba_mod.init_mamba(k1, cfg, dtype)
+    p["norm2"] = init_rmsnorm(d, dtype)
+    if ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def block_forward(p: Params, cfg, kind: str, h: jnp.ndarray,
+                  positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block. Returns (h, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    if kind == "mlstm":
+        return h + xlstm_mod.mlstm(p["mixer"], cfg, x), aux
+    if kind == "slstm":
+        return h + xlstm_mod.slstm(p["mixer"], cfg, x), aux
+    mixer, ffn = kind.split("+")
+    if mixer == "attn":
+        h = h + attn_mod.attention(p["mixer"], cfg, x, positions)
+    else:
+        h = h + mamba_mod.mamba(p["mixer"], cfg, x)
+    h = constrain(h, "hidden")
+    x = rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if ffn == "moe":
+        y, aux = moe_mod.moe_ffn(p["ffn"], cfg, x)
+        h = h + y
+    else:
+        h = h + mlp(p["ffn"], x, cfg.act)
+    return constrain(h, "hidden"), aux
+
+
+def block_decode(p: Params, cfg, kind: str, h: jnp.ndarray,
+                 pos: jnp.ndarray, cache: Params
+                 ) -> Tuple[jnp.ndarray, Params]:
+    x = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    if kind == "mlstm":
+        y, cache = xlstm_mod.mlstm_decode(p["mixer"], cfg, x, cache)
+        return h + y, cache
+    if kind == "slstm":
+        y, cache = xlstm_mod.slstm_decode(p["mixer"], cfg, x, cache)
+        return h + y, cache
+    mixer, ffn = kind.split("+")
+    if mixer == "attn":
+        y, kc, vc = attn_mod.decode_attention(
+            p["mixer"], cfg, x, pos, cache["k"], cache["v"])
+        cache = {"k": kc, "v": vc}
+        h = h + y
+    else:
+        y, cache = mamba_mod.mamba_decode(p["mixer"], cfg, x, cache)
+        h = h + y
+    x = rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if ffn == "moe":
+        y, _ = moe_mod.moe_ffn(p["ffn"], cfg, x)
+        h = h + y
+    else:
+        h = h + mlp(p["ffn"], x, cfg.act)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg) -> Params:
+    dtype = param_dtype_of(cfg)
+    gk = _group_kinds(cfg)
+    n_groups = cfg.n_layers // cfg.layer_group
+    keys = jax.random.split(key, 3 + len(gk))
+
+    blocks = []
+    for gp, kind in enumerate(gk):
+        gkeys = jax.random.split(keys[3 + gp], n_groups)
+        stacked = jax.vmap(lambda k: init_block(k, cfg, kind))(gkeys)
+        blocks.append(stacked)
+
+    p: Params = {
+        "embed": init_embed(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "norm_f": init_rmsnorm(cfg.d_model, dtype),
+        "blocks": tuple(blocks),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_linear(keys[1], cfg.d_model, cfg.vocab_padded,
+                                   dtype)
+    return p
+
+
+def _logits(p: Params, cfg, h: jnp.ndarray) -> jnp.ndarray:
+    h = rmsnorm(p["norm_f"], h, cfg.norm_eps)
+    # gather seq over model before the vocab projection so the matmul
+    # produces vocab-sharded logits directly (no unsharded-V intermediate)
+    h = constrain(h, "pre_logits")
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"]["table"].astype(h.dtype).T
+    else:
+        logits = linear(p["unembed"], h)
+    if cfg.vocab_padded != cfg.vocab:   # mask padding columns (fused)
+        valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(valid, logits, -1e30)
+    return constrain(logits, "logits")
+
+
+def lm_forward(p: Params, cfg, tokens: jnp.ndarray,
+               frontend: Optional[jnp.ndarray] = None,
+               last_only: bool = False) -> jnp.ndarray:
+    """Train / prefill forward. tokens: (B, S) int32; frontend: (B, F, D)
+    precomputed modality embeddings, prepended (VLM stub)."""
+    dtype = jnp.bfloat16   # compute dtype: bf16 everywhere (mixed precision)
+    h = embed(p["embed"], tokens, dtype)
+    if frontend is not None:
+        h = jnp.concatenate([frontend.astype(dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = constrain(h, "hidden")
+
+    gk = _group_kinds(cfg)
+
+    # NOTE: nested per-sublayer checkpointing inside the group was tried
+    # for jamba's period-8 groups and REGRESSED memory (123.7→127.8 GB)
+    # and compile time (53→122 s) — see EXPERIMENTS §Perf iter 9. The
+    # peak is optimizer-stage whole-model temporaries, not sublayer
+    # transient overlap.
+    def group_body(h, gparams):
+        aux = jnp.zeros((), jnp.float32)
+        for gp, kind in enumerate(gk):
+            h, a = block_forward(gparams[gp], cfg, kind, h, positions)
+            aux = aux + a
+        return h, aux
+
+    body = group_body
+    if cfg.remat == "block":
+        body = jax.checkpoint(group_body)
+
+    def scan_fn(carry, gparams):
+        h, aux = carry
+        h, a = body(h, gparams)
+        return (h, aux + a), None
+
+    (h, aux), _ = lax.scan(scan_fn, (h, jnp.zeros((), jnp.float32)),
+                           p["blocks"])
+    if frontend is not None:
+        h = h[:, frontend.shape[1]:]
+    if last_only:
+        h = h[:, -1:]
+    logits = _logits(p, cfg, h)
+    return logits, aux
+
+
+def lm_loss(p: Params, cfg, batch: Dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    logits, aux = lm_forward(p, cfg, tokens,
+                             frontend=batch.get("frontend"))
+    return cross_entropy(logits, labels,
+                         batch.get("loss_mask")) + 0.01 * aux
+
+
+# -- decode -------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, seq: int) -> Params:
+    """Shape spec (dicts of tuples) for the decode cache."""
+    gk = _group_kinds(cfg)
+    n_groups = cfg.n_layers // cfg.layer_group
+    out = []
+    for kind in gk:
+        if kind == "mlstm":
+            spec = xlstm_mod.mlstm_state_spec(cfg, batch)
+        elif kind == "slstm":
+            spec = xlstm_mod.slstm_state_spec(cfg, batch)
+        elif kind.startswith("mamba"):
+            spec = mamba_mod.mamba_state_spec(cfg, batch)
+        else:
+            spec = {"k": (batch, seq, cfg.n_kv_heads, cfg.hd),
+                    "v": (batch, seq, cfg.n_kv_heads, cfg.hd)}
+        out.append({k: (n_groups,) + v for k, v in spec.items()})
+    return tuple(out)
+
+
+_F32_CACHE_KEYS = {"c", "n", "m", "ssm", "C"}
+
+
+def cache_dtype(key: str, cfg):
+    """Recurrent statistics stay f32; KV/conv caches are bf16 (matching
+    the bf16 compute dtype — keeps the decode scan carry type stable)."""
+    if key in _F32_CACHE_KEYS:
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def init_cache(cfg, batch: int, seq: int) -> Params:
+    spec = cache_spec(cfg, batch, seq)
+    out = []
+    for entry in spec:
+        d = {}
+        for k, shape in entry.items():
+            fill = -1e30 if k == "m" else 0.0
+            d[k] = jnp.full(shape, fill, cache_dtype(k, cfg))
+        out.append(d)
+    return tuple(out)
+
+
+def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos: jnp.ndarray,
+                   cache) -> Tuple[jnp.ndarray, Params]:
+    """One serving step. token: (B,) int32; pos: (B,) current position;
+    cache as from init_cache. Returns (logits (B, vocab), new cache)."""
+    dtype = jnp.bfloat16   # compute dtype: bf16 everywhere (mixed precision)
+    h = embed(p["embed"], token[:, None], dtype)        # (B,1,D)
+    gk = _group_kinds(cfg)
+
+    def scan_fn(h, xs):
+        gparams, gcache = xs
+        new_cache = []
+        for gp, kind in enumerate(gk):
+            h, nc = block_decode(gparams[gp], cfg, kind, h, pos, gcache[gp])
+            new_cache.append(nc)
+        return h, tuple(new_cache)
+
+    h, new_cache = lax.scan(scan_fn, h, (p["blocks"], cache))
+    logits = _logits(p, cfg, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) and recurrent
+sLSTM (scalar memory), per arXiv:2405.04517.
+
+TPU adaptation: the mLSTM recurrence is evaluated chunkwise — intra-chunk
+contributions via an attention-like (L×L) masked product in log-gate
+space, inter-chunk state carried through ``lax.scan`` — so nothing of
+size (seq × d × d) is ever materialized and the MXU does the work. The
+sLSTM keeps its true hidden-to-gate recurrence (not parallelizable) and
+runs as a time scan. Stabilization: sigmoid forget gates in log space +
+a per-sequence max-stabilized exponential input gate (documented
+simplification of the paper's running-max stabilizer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import init_linear, linear, rmsnorm, init_rmsnorm
+
+Params = Dict
+
+__all__ = ["init_mlstm", "mlstm", "mlstm_decode", "mlstm_state_spec",
+           "init_slstm", "slstm", "slstm_decode", "slstm_state_spec"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, dtype),
+        "wk": init_linear(ks[1], d, h * hd, dtype),
+        "wv": init_linear(ks[2], d, h * hd, dtype),
+        "wi": init_linear(ks[3], d, h, dtype),       # input gate (per head)
+        "wf": init_linear(ks[4], d, h, dtype),       # forget gate
+        "wo": init_linear(ks[5], h * hd, d, dtype),
+        "ogate": init_linear(ks[6], d, h * hd, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int):
+    """q/k/v: (B,S,H,hd) f32; log_i/log_f: (B,S,H). Returns y (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    L = min(chunk, S)
+    nc = S // L
+    scale = hd ** -0.5
+
+    qr = q.reshape(B, nc, L, H, hd).transpose(1, 0, 3, 2, 4) * scale
+    kr = k.reshape(B, nc, L, H, hd).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nc, L, H, hd).transpose(1, 0, 3, 2, 4)
+    lir = log_i.reshape(B, nc, L, H).transpose(1, 0, 3, 2)
+    lfr = log_f.reshape(B, nc, L, H).transpose(1, 0, 3, 2)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(carry, inp):
+        C0, n0 = carry                       # (B,H,hd,hd), (B,H,hd)
+        qc, kc, vc, li, lf = inp             # (B,H,L,hd)... (B,H,L)
+        bf = jnp.cumsum(lf, axis=-1)         # (B,H,L) log Π f
+        # intra-chunk: w_tj = exp(bf_t - bf_j + li_j), j <= t
+        wlog = bf[..., :, None] - bf[..., None, :] + li[..., None, :]
+        w = jnp.where(tri[None, None], jnp.exp(wlog), 0.0)
+        s = jnp.einsum("bhtd,bhjd->bhtj", qc, kc) * w
+        y_intra = jnp.einsum("bhtj,bhjd->bhtd", s, vc)
+        # n_t(intra) = Σ_j w_tj k_j  (the i_j factor is inside w)
+        n_intra = jnp.einsum("bhtj,bhjd->bhtd", w, kc)
+        # inter-chunk: carry contribution scaled by Π f up to t
+        Ft = jnp.exp(bf)                     # (B,H,L)
+        y_state = jnp.einsum("bhtd,bhde->bhte", qc, C0) * Ft[..., None]
+        n_state = n0[:, :, None] * Ft[..., None]
+        nvec = n_intra + n_state
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhtd,bhtd->bht", qc, nvec)), 1.0)
+        y = (y_intra + y_state) / denom[..., None]
+        # chunk-end state
+        FL = jnp.exp(bf[..., -1])            # (B,H)
+        decay = jnp.exp(bf[..., -1:] - bf + li)       # (B,H,L)
+        C1 = C0 * FL[..., None, None] + jnp.einsum(
+            "bhld,bhle,bhl->bhde", kc, vc, decay)
+        n1 = n0 * FL[..., None] + jnp.einsum("bhld,bhl->bhd", kc, decay)
+        return (C1, n1), y
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    _, ys = lax.scan(step, (C0, n0), (qr, kr, vr, lir, lfr))
+    return ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+
+
+def _gates(p, cfg, x):
+    B, S, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(B, S, h, hd).astype(jnp.float32)
+    k = linear(p["wk"], x).reshape(B, S, h, hd).astype(jnp.float32)
+    v = linear(p["wv"], x).reshape(B, S, h, hd).astype(jnp.float32)
+    i_raw = linear(p["wi"], x).astype(jnp.float32)            # (B,S,H)
+    f_raw = linear(p["wf"], x).astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_raw)                          # log σ(f)
+    log_i = i_raw - lax.stop_gradient(i_raw.max())            # exp gate ≤ 1
+    return q, k, v, log_i, log_f
+
+
+def mlstm(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, _ = x.shape
+    q, k, v, log_i, log_f = _gates(p, cfg, x)
+    y = _mlstm_chunk_scan(q, k, v, log_i, log_f, cfg.xlstm_chunk)
+    y = y.astype(x.dtype).reshape(B, S, cfg.n_heads * cfg.hd)
+    o = jax.nn.sigmoid(linear(p["ogate"], x))
+    return linear(p["wo"], y * o)
+
+
+def mlstm_state_spec(cfg, batch: int):
+    h, hd = cfg.n_heads, cfg.hd
+    return {"C": (batch, h, hd, hd), "n": (batch, h, hd)}
+
+
+def mlstm_decode(p: Params, cfg, x: jnp.ndarray, state: Dict
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,1,D)."""
+    B = x.shape[0]
+    q, k, v, log_i, log_f = _gates(p, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # (B,H,hd)
+    li, lf = log_i[:, 0], log_f[:, 0]                      # (B,H)
+    f = jnp.exp(lf)[..., None, None]
+    i = jnp.exp(li)[..., None, None]
+    C = state["C"] * f + i * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = state["n"] * f[..., 0] + i[..., 0] * k
+    qs = q * cfg.hd ** -0.5
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), 1.0)
+    y = jnp.einsum("bhd,bhde->bhe", qs, C) / denom[..., None]
+    y = y.astype(x.dtype).reshape(B, 1, cfg.n_heads * cfg.hd)
+    o = jax.nn.sigmoid(linear(p["ogate"], x))
+    return linear(p["wo"], y * o), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": init_linear(ks[0], d, 4 * h * hd, dtype),     # z,i,f,o from x
+        "wr": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+               / jnp.sqrt(hd)).astype(dtype),               # block-diag rec.
+        "wo": init_linear(ks[2], h * hd, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg, xg, state):
+    """One step. xg: (B,H,4*hd) pre-activations from x; state dict."""
+    h_, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    rec = jnp.einsum("bhd,hde->bhe", h_, p["wr"].astype(h_.dtype))
+    g = (xg + rec).astype(jnp.float32)
+    hd = cfg.hd
+    z, i_raw, f_raw, o_raw = [g[..., k * hd:(k + 1) * hd] for k in range(4)]
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * jnp.tanh(z)
+    n_new = f * n + i
+    hh = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+    hh = hh.astype(h_.dtype)
+    return hh, {"h": hh, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xg = linear(p["wx"], x).reshape(B, S, h, 4 * hd)
+    state = slstm_init_state(cfg, B, x.dtype)
+
+    def step(st, xt):
+        hh, st = _slstm_cell(p, cfg, xt, st)
+        return st, hh
+
+    _, hs = lax.scan(step, state, xg.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, h * hd)
+    return linear(p["wo"], y)
+
+
+def slstm_init_state(cfg, batch: int, dtype):
+    h, hd = cfg.n_heads, cfg.hd
+    f32 = jnp.float32
+    return {"h": jnp.zeros((batch, h, hd), dtype),
+            "c": jnp.zeros((batch, h, hd), f32),
+            "n": jnp.zeros((batch, h, hd), f32),
+            "m": jnp.full((batch, h, hd), -1e30, f32)}
+
+
+def slstm_state_spec(cfg, batch: int):
+    h, hd = cfg.n_heads, cfg.hd
+    return {"h": (batch, h, hd), "c": (batch, h, hd),
+            "n": (batch, h, hd), "m": (batch, h, hd)}
+
+
+def slstm_decode(p: Params, cfg, x: jnp.ndarray, state: Dict
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    B = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    xg = linear(p["wx"], x)[:, 0].reshape(B, h, 4 * hd)
+    hh, state = _slstm_cell(p, cfg, xg, state)
+    return linear(p["wo"], hh.reshape(B, 1, h * hd)), state

@@ -1,0 +1,5 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedules import cosine_warmup
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_warmup"]

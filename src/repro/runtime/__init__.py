@@ -1,0 +1,5 @@
+from .sharding import (param_specs, batch_specs, cache_pspec, act_policy,
+                       DATA_AXES)
+
+__all__ = ["param_specs", "batch_specs", "cache_pspec", "act_policy",
+           "DATA_AXES"]

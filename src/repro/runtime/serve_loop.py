@@ -1,0 +1,84 @@
+"""Batched serving loop: continuous batching over a request queue.
+
+Slots hold independent requests; every engine step decodes one token for
+every active slot (the whole batch shares one jitted decode_step). Free
+slots are refilled from the queue each step — the standard continuous-
+batching pattern, with per-slot positions so requests of different
+lengths coexist in one KV cache."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api, params, batch_slots: int, max_seq: int,
+                 greedy: bool = True):
+        self.api = api
+        self.params = params
+        self.B = batch_slots
+        self.S = max_seq
+        self.cache = api.init_cache(batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self._step = jax.jit(api.decode_step)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # feed the prompt token by token (prefill-as-decode; a
+                # production engine would run a fused prefill here)
+                self.pos[i] = 0
+                req._feed = list(req.prompt)
+                self.last_token[i] = req._feed.pop(0)
+
+    def step(self):
+        """One engine iteration: decode one token for every active slot."""
+        self._fill_slots()
+        if all(s is None for s in self.slots):
+            return False
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self.last_token),
+            jnp.asarray(self.pos), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if getattr(req, "_feed", None):
+                self.last_token[i] = req._feed.pop(0)   # still prefilling
+                continue
+            req.out.append(int(nxt[i]))
+            self.last_token[i] = nxt[i]
+            if len(req.out) >= req.max_new or self.pos[i] >= self.S - 1:
+                req.done = True
+                self.slots[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step():
+                break

@@ -1,0 +1,214 @@
+"""Sharding rules: 2-D FSDP×TP over mesh axes (data, model), with the
+optional leading pod axis folded into the data (FSDP) dimension.
+
+Every parameter is fully sharded over *both* axes (ZeRO-3-style: weights
+FSDP-sharded on one dim, tensor-parallel on the other) — required for the
+314B/398B archs to fit 16 GB chips on a 256-chip pod. Optimizer states
+inherit param specs. Activations: batch→data, and (train/prefill)
+sequence→model between blocks (Megatron-style sequence sharding keeps the
+remat-saved residuals 1/16th size); attention/ffn internals re-shard to
+heads/ffn TP automatically via GSPMD propagation from the weight specs.
+
+Dims that don't divide the axis size fall back to replication — this is
+what makes the *same* rules work for 14-head internvl2 and 64-head qwen3.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")   # folded FSDP axes when the pod axis exists
+
+
+def _axes_of(mesh: Mesh) -> Tuple[Any, str]:
+    names = mesh.axis_names
+    if "pod" in names:
+        return (("pod", "data"), "model")
+    return ("data", "model")
+
+
+def _size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return axis is not None and dim % _size(mesh, axis) == 0
+
+
+def _spec2d(mesh: Mesh, d0: int, d1: int, a0, a1) -> P:
+    """Shard (d0, d1) over (a0, a1) with divisibility fallback."""
+    s0 = a0 if _fits(d0, mesh, a0) else None
+    s1 = a1 if _fits(d1, mesh, a1) else None
+    return P(s0, s1)
+
+
+_OUT_PARALLEL = ("wq", "wk", "wv", "up", "gate", "ogate", "wx", "in_proj",
+                 "unembed")
+_IN_PARALLEL = ("wo", "down", "out_proj")
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    dta, mdl = _axes_of(mesh)
+    nd = len(shape)
+
+    def pad(spec: P) -> P:
+        return P(*([None] * (nd - len(spec)) + list(spec)))
+
+    if nd <= 1:
+        return P(*([None] * nd))
+    t0, t1 = shape[-2], shape[-1]
+    if "w_up" in path or "w_gate" in path:      # (E, D, F)
+        E = shape[-3]
+        if _fits(E, mesh, mdl):                 # expert parallel
+            return pad(P(*([None] * (nd - 3)), mdl,
+                          dta if _fits(t0, mesh, dta) else None, None))
+        return pad(_spec2d(mesh, t0, t1, dta, mdl))
+    if "w_down" in path:                        # (E, F, D)
+        E = shape[-3]
+        if _fits(E, mesh, mdl):
+            return pad(P(*([None] * (nd - 3)), mdl, None,
+                          dta if _fits(t1, mesh, dta) else None))
+        return pad(_spec2d(mesh, t0, t1, mdl, dta))
+    if "embed" in path and "unembed" not in path:   # (V, D)
+        return pad(_spec2d(mesh, t0, t1, mdl, dta))
+    if "router" in path:                        # (D, E)
+        return pad(_spec2d(mesh, t0, t1, dta, None))
+    if "x_proj" in path:                        # (di, 2ds+1)
+        return pad(_spec2d(mesh, t0, t1, mdl, None))
+    if "A_log" in path:
+        return pad(_spec2d(mesh, t0, t1, mdl, None))
+    if "conv_w" in path:                        # (dc, di)
+        return pad(_spec2d(mesh, t0, t1, None, mdl))
+    if "wr" in path:                            # (h, hd, 4hd)
+        return pad(_spec2d(mesh, t0, t1, None, mdl))
+    if any(k in path for k in _IN_PARALLEL):    # (F, D)
+        return pad(_spec2d(mesh, t0, t1, mdl, dta))
+    if any(k in path for k in _OUT_PARALLEL):   # (D, F)
+        return pad(_spec2d(mesh, t0, t1, dta, mdl))
+    return pad(_spec2d(mesh, t0, t1, dta, mdl))
+
+
+def param_specs(shapes_tree, mesh: Mesh):
+    """PartitionSpec tree matching a params (or optimizer-state) tree of
+    ShapeDtypeStructs/arrays."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        specs.append(_leaf_spec(path, tuple(leaf.shape), mesh))
+    return treedef.unflatten(specs)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- batch / cache ------------------------------------------------------------
+
+def batch_specs(batch_shapes: Dict, mesh: Mesh) -> Dict:
+    dta, mdl = _axes_of(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        b = v.shape[0]
+        s0 = dta if _fits(b, mesh, dta) else (
+            "data" if _fits(b, mesh, "data") else None)
+        if len(v.shape) >= 2 and v.shape[1] % _size(mesh, mdl) == 0 and \
+                v.shape[1] > 1:
+            out[k] = P(*([s0, mdl] + [None] * (len(v.shape) - 2)))
+        else:
+            out[k] = P(*([s0] + [None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode-cache sharding: leading stack axis unsharded, batch→data,
+    longest remaining (sequence/state) dim→model if divisible."""
+    dta, mdl = _axes_of(mesh)
+    spec = [None] * len(shape)
+    if len(shape) >= 2:
+        b = shape[1]
+        if _fits(b, mesh, dta):
+            spec[1] = dta
+        elif _fits(b, mesh, "data"):
+            spec[1] = "data"
+    if len(shape) >= 3:
+        # shard the largest trailing dim over model (KV seq, d_inner, …)
+        rest = list(range(2, len(shape)))
+        best = max(rest, key=lambda i: shape[i])
+        if _fits(shape[best], mesh, mdl):
+            spec[best] = mdl
+    return P(*spec)
+
+
+# -- activation constraint policy ---------------------------------------------
+
+def act_policy(mesh: Mesh):
+    dta, mdl = _axes_of(mesh)
+    info = {"data_groups": _size(mesh, dta), "model_size": _size(mesh, mdl)}
+
+    def policy(name: str, x) -> Optional[P]:
+        shape = x.shape
+        if name == "moe_dispatch" and len(shape) == 4:
+            # (G, E, C, D): groups->data; experts->model when divisible
+            G, E = shape[0], shape[1]
+            sg = dta if _fits(G, mesh, dta) else (
+                "data" if _fits(G, mesh, "data") else None)
+            se = mdl if _fits(E, mesh, mdl) else None
+            return P(sg, se, None, None)
+        if name == "moe_ffn_act" and len(shape) == 4:
+            # (G, E, C, F): experts->model, else ffn->model
+            G, E, _, F = shape
+            sg = dta if _fits(G, mesh, dta) else (
+                "data" if _fits(G, mesh, "data") else None)
+            if _fits(E, mesh, mdl):
+                return P(sg, mdl, None, None)
+            return P(sg, None, None, mdl if _fits(F, mesh, mdl) else None)
+        if name == "attn_chunked_q" and len(shape) == 6:
+            # (nq, B, H, G, qc, hd): batch->data, heads->model
+            _, B, H = shape[:3]
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            sh = mdl if _fits(H, mesh, mdl) else None
+            return P(None, sb, sh, None, None, None)
+        if name == "attn_kv_full" and len(shape) == 4:
+            # (B, S, KV, hd): batch->data, heads replicated (pre-repeat)
+            B = shape[0]
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            return P(sb, None, None, None)
+        if name == "attn_chunked_kv" and len(shape) == 5:
+            _, B, H = shape[:3]
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            sh = mdl if _fits(H, mesh, mdl) else None
+            return P(None, sb, sh, None, None)
+        if name == "hidden" and len(shape) == 3:
+            B, S, D = shape
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            ss = mdl if (S > 1 and _fits(S, mesh, mdl)) else None
+            return P(sb, ss, None)
+        if name == "pre_logits" and len(shape) == 3:
+            B = shape[0]
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            return P(sb, None, None)
+        if name == "logits":
+            V = shape[-1]
+            sv = mdl if _fits(V, mesh, mdl) else None
+            B = shape[0]
+            sb = dta if _fits(B, mesh, dta) else (
+                "data" if _fits(B, mesh, "data") else None)
+            return P(*([sb] + [None] * (len(shape) - 2) + [sv]))
+        return None
+
+    policy.info = info
+    return policy

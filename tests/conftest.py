@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run single-device (the dry-run owns the 512-device trick);
+# distributed tests spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,138 @@
+"""Distributed tests — run in subprocesses with their own XLA device
+count (8 host devices), so the main pytest process stays single-device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, ndev: int = 8, x64: bool = False, timeout=420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if x64:
+        env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_tree_collectives_match_builtins():
+    run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.trees import TreeKind, build_tree
+        from repro.comm.treecomm import (tree_allreduce, subset_broadcast,
+                                         subset_reduce)
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs).reshape(8), ("x",))
+        x = jnp.arange(8.0 * 4).reshape(8, 4)
+        members = [1, 3, 4, 6]
+        y = jax.jit(jax.shard_map(
+            lambda v: subset_broadcast(v, "x", 3, members,
+                                       TreeKind.SHIFTED, tag=7),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        y = np.asarray(y)
+        for r in range(8):
+            exp = x[3] if r in members else x[r]
+            assert np.allclose(y[r], exp)
+        z = jax.jit(jax.shard_map(
+            lambda v: subset_reduce(v, "x", 4, members, TreeKind.BINARY),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        assert np.allclose(np.asarray(z)[4],
+                           sum(np.asarray(x[m]) for m in members))
+        tree = build_tree(TreeKind.SHIFTED, 2, [0,1,3,4,5,6,7], tag=13)
+        w = jax.jit(jax.shard_map(
+            lambda v: tree_allreduce(v, "x", tree),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        assert np.allclose(np.asarray(w), np.asarray(x).sum(0))
+        print("OK")
+    """)
+
+
+def test_hierarchical_allreduce_matches_psum():
+    run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.comm.hierarchical import hierarchical_allreduce
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs).reshape(2, 4), ("pod", "data"))
+        xx = jnp.arange(8.0 * 8).reshape(2, 4, 8)
+        def ha(xs):
+            return hierarchical_allreduce(
+                xs.reshape(8), "pod", "data", 2, 4, tag=3).reshape(1, 1, 8)
+        out = jax.jit(jax.shard_map(ha, mesh=mesh, in_specs=P("pod","data"),
+                                    out_specs=P("pod","data")))(xx)
+        assert np.allclose(np.asarray(out), np.asarray(xx).sum((0,1)))
+        print("OK")
+    """)
+
+
+def test_distributed_pselinv_matches_oracle():
+    run_sub("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.trees import TreeKind
+        from repro.core.pselinv_dist import run_distributed, gather_blocks
+        from repro.core.selinv import dense_selinv_oracle
+        A = sparse.laplacian_2d(12, 8)
+        ref = dense_selinv_oracle(A)
+        for kind in (TreeKind.FLAT, TreeKind.SHIFTED):
+            out, prog = run_distributed(A, b=8, pr=4, pc=2, kind=kind,
+                                        dtype=jnp.float64)
+            blocks = gather_blocks(out, prog)
+            bs = prog.bs
+            err = 0.0
+            for K in range(bs.nsuper):
+                err = max(err, abs(blocks[K, K]
+                                   - ref[K*8:(K+1)*8, K*8:(K+1)*8]).max())
+                for I in bs.struct[K]:
+                    I = int(I)
+                    err = max(err, abs(blocks[I, K]
+                                       - ref[I*8:(I+1)*8, K*8:(K+1)*8]).max())
+            assert err < 1e-9, (kind, err)
+        print("OK")
+    """, x64=True)
+
+
+def test_grad_sync_tree_equals_psum():
+    """Manual-DP gradient sync with the paper's hierarchical tree equals
+    plain psum (the LM-training integration of the technique)."""
+    run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.comm.hierarchical import hierarchical_allreduce
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs).reshape(2, 4), ("pod", "data"))
+        w = jnp.ones((16,)) * 0.5
+        x = jnp.arange(2.0 * 4 * 16).reshape(2, 4, 16)
+
+        def loss(w, xb):
+            return jnp.sum(jnp.tanh(xb @ w))
+
+        def step_tree(w, xb):
+            g = jax.grad(loss)(w, xb.reshape(1, 16))
+            g = hierarchical_allreduce(g, "pod", "data", 2, 4, tag=0)
+            return g.reshape(1, 1, 16)
+
+        def step_psum(w, xb):
+            g = jax.grad(loss)(w, xb.reshape(1, 16))
+            return jax.lax.psum(g, ("pod", "data")).reshape(1, 1, 16)
+
+        gt = jax.jit(jax.shard_map(lambda xb: step_tree(w, xb), mesh=mesh,
+                     in_specs=P("pod", "data"), out_specs=P("pod","data")))(x)
+        gp = jax.jit(jax.shard_map(lambda xb: step_psum(w, xb), mesh=mesh,
+                     in_specs=P("pod", "data"), out_specs=P("pod","data")))(x)
+        assert np.allclose(np.asarray(gt), np.asarray(gp), rtol=1e-6)
+        print("OK")
+    """)

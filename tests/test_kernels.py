@@ -1,0 +1,95 @@
+"""Pallas kernels: shape/dtype sweeps, allclose vs the ref.py oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.block_gemm import block_gemm_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.trsm import trsm_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 128),
+                                   (200, 130, 70), (33, 17, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_gemm_sweep(m, k, n, dtype):
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    out = block_gemm_pallas(a, b, interpret=True)
+    expect = ref.gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("alpha", [1.0, -1.0])
+def test_block_gemm_alpha(alpha):
+    a = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    out = block_gemm_pallas(a, a, alpha=alpha, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               alpha * np.asarray(a) @ np.asarray(a),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 64), (2, 256, 4, 64),
+                                      (1, 512, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, hd, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, hd)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128,
+                                 interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 3e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 3e-3)
+
+
+def test_flash_matches_model_attention_path():
+    """The pure-jnp chunked attention in models/ and the Pallas kernel
+    agree (same oracle)."""
+    from repro.models.attention import _flash
+    q = jnp.asarray(RNG.standard_normal((2, 256, 4, 64)), jnp.float32)
+    a = _flash(q, q, q, 0, True, 64, 64)
+    b = flash_attention_pallas(q * 64 ** -0.5 / (64 ** -0.5), q, q,
+                               causal=True, interpret=True)
+    # _flash applies the scale internally; pass the same inputs
+    a2 = _flash(q, q, q, 0, True, 128, 128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 256), (100, 512), (7, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = jnp.asarray(RNG.standard_normal((rows, d)), dtype)
+    s = jnp.asarray(RNG.standard_normal((d,)), dtype)
+    out = rmsnorm_pallas(x, s, interpret=True)
+    expect = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,k", [(64, 32), (100, 64), (130, 48)])
+def test_trsm_sweep(m, k):
+    u = jnp.asarray(np.triu(RNG.standard_normal((k, k))) + 4 * np.eye(k),
+                    jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    out = trsm_pallas(b, u, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.trsm_ref(b, u)),
+                               rtol=1e-3, atol=1e-3)
+    # residual check: X @ U == B
+    np.testing.assert_allclose(np.asarray(out) @ np.asarray(u),
+                               np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,77 @@
+"""Selected inversion correctness: Alg. 1 vs the dense-inverse oracle."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse
+from repro.core.selinv import (compare_with_oracle, dense_selinv_oracle,
+                               selected_inverse)
+from repro.core.supernodal_lu import dense_lu_nopivot, factorize
+from repro.core.symbolic import symbolic_factorize
+
+
+def test_dense_lu_nopivot():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((24, 24)) + 24 * np.eye(24)
+    L, U = dense_lu_nopivot(a)
+    np.testing.assert_allclose(L @ U, a, atol=1e-10)
+    assert np.allclose(np.diag(L), 1.0)
+
+
+def test_lu_reconstructs_matrix():
+    A = sparse.laplacian_2d(7, 7)
+    lu = factorize(A, max_supernode=5)
+    bs = lu.bs
+    n = A.shape[0]
+    Lfull = np.zeros((n, n))
+    Ufull = np.zeros((n, n))
+    for K in range(bs.nsuper):
+        r = slice(bs.offsets[K], bs.offsets[K + 1])
+        Lfull[r, r] = lu.Ldiag[K]
+        Ufull[r, r] = lu.Udiag[K]
+        for I in bs.struct[K]:
+            I = int(I)
+            ri = slice(bs.offsets[I], bs.offsets[I + 1])
+            Lfull[ri, r] = lu.L[(I, K)]
+            Ufull[r, ri] = lu.U[(K, I)]
+    np.testing.assert_allclose(Lfull @ Ufull, A.todense(), atol=1e-9)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_selinv_matches_oracle(backend):
+    A = sparse.laplacian_2d(8, 8)
+    Ainv, bs = selected_inverse(A, max_supernode=6, backend=backend)
+    err = compare_with_oracle(Ainv, bs, A)
+    assert err < (1e-9 if backend == "numpy" else 1e-4)
+
+
+def test_selinv_nonsymmetric_values():
+    A = sparse.make_numeric(sparse.grid_graph_2d(6, 7, stencil=5), seed=3)
+    Ainv, bs = selected_inverse(A, max_supernode=5)
+    assert compare_with_oracle(Ainv, bs, A) < 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 7), st.integers(3, 7), st.integers(2, 9),
+       st.integers(0, 10_000))
+def test_selinv_property_random_grids(nx, ny, cap, seed):
+    """Property: selected entries equal the dense inverse for random
+    diagonally-dominant matrices on random grid shapes and supernode
+    caps."""
+    A = sparse.make_numeric(sparse.grid_graph_2d(nx, ny, stencil=9),
+                            seed=seed)
+    Ainv, bs = selected_inverse(A, max_supernode=cap)
+    assert compare_with_oracle(Ainv, bs, A) < 1e-8
+
+
+def test_symbolic_fill_is_superset_and_etree_consistent():
+    A = sparse.laplacian_2d(9, 9)
+    bs = symbolic_factorize(A, max_supernode=4)
+    for K in range(bs.nsuper):
+        a = set(int(i) for i in bs.a_struct[K])
+        f = set(int(i) for i in bs.struct[K])
+        assert a <= f
+        if f:
+            assert bs.parent[K] == min(f)
+        assert all(i > K for i in f)
