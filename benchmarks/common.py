@@ -2,9 +2,14 @@
 from __future__ import annotations
 
 import os
+import re
 import time
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+#: every csv_row lands here so ``run.py --json`` can persist the whole
+#: session machine-readably (perf-trajectory tracking)
+RESULTS: list = []
 
 
 def ensure_out() -> str:
@@ -23,5 +28,28 @@ def timed(fn, *args, reps: int = 3, **kw):
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call),
+                    "derived": derived})
     print(line, flush=True)
     return line
+
+
+_ROW_NAME = re.compile(r"^[\w./-]+$")
+
+
+def reemit_child_rows(stdout: str) -> None:
+    """Re-record ``name,us,derived`` rows printed by a re-exec'd child
+    bench process through :func:`csv_row` (so --json captures them).
+    Only lines whose name field looks like a bench id are recorded —
+    library warnings with commas pass through verbatim."""
+    for line in stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3 and _ROW_NAME.match(parts[0]):
+            try:
+                us = float(parts[1])
+            except ValueError:
+                print(line, flush=True)
+                continue
+            csv_row(parts[0], us, parts[2])
+        elif line.strip():
+            print(line, flush=True)

@@ -1,8 +1,14 @@
 """Selected-inversion numeric benchmark: numpy vs jax vs pallas backends
 (the supernodal GEMM/TRSM hot spots through the kernel layer), plus the
-distributed ppermute sweep on host devices when >1 device is available."""
+unrolled-vs-IR distributed sweep comparison: trace (lower) time, XLA
+compile time, HLO size, and run time of the legacy per-supernode executor
+against the CommPlan level-pipelined executor on an 8-device host mesh
+(re-exec'd in a subprocess so the main process stays single-device)."""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -12,7 +18,7 @@ import jax
 from repro.core import sparse
 from repro.core.selinv import compare_with_oracle, selected_inverse
 
-from .common import csv_row, timed
+from .common import csv_row, reemit_child_rows, timed
 
 
 def run(full: bool = False):
@@ -26,8 +32,81 @@ def run(full: bool = False):
         csv_row(f"selinv/{backend}", dt * 1e6,
                 f"N={A.shape[0]} nsuper={bs.nsuper} err={err:.2e}")
         assert err < 1e-3
+    _run_ir_compare(full)
+    return True
+
+
+def _run_ir_compare(full: bool):
+    """Re-exec the sweep comparison with 8 host devices."""
+    if len(jax.devices()) >= 8:
+        return _ir_compare_child(full)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.pselinv_bench", "--ir-compare"]
+        + (["--full"] if full else []),
+        env=env, cwd=root, capture_output=True, text=True, timeout=900)
+    reemit_child_rows(r.stdout)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+
+
+def _ir_compare_child(full: bool):
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.pselinv_dist import (build_program,
+                                         build_program_unrolled, make_sweep,
+                                         make_sweep_unrolled, prepare_inputs)
+    from repro.core.trees import TreeKind
+
+    nx = 32 if full else 16          # nb = nx (b=8 supernodes per grid row)
+    A = sparse.laplacian_2d(nx, 8)
+    b, pr, pc = 8, 4, 2
+    bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
+    devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
+    mesh = Mesh(devs, ("xy",))
+    Lh = jnp.asarray(Lh_s, jnp.float32)
+    Dinv = jnp.asarray(Dinv_s, jnp.float32)
+
+    outs = {}
+    for name, builder, mk in (
+            ("unrolled", build_program_unrolled, make_sweep_unrolled),
+            ("ir", build_program, make_sweep)):
+        t0 = time.perf_counter()
+        prog = builder(bs, nb, b, pr, pc, TreeKind.SHIFTED)
+        sweep = mk(prog)
+        fn = jax.jit(shard_map(sweep, mesh=mesh,
+                               in_specs=(P("xy"), P("xy")),
+                               out_specs=P("xy")))
+        lowered = fn.lower(Lh, Dinv)
+        t_trace = time.perf_counter() - t0
+        hlo_lines = len(lowered.as_text().splitlines())
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        out, dt = timed(
+            lambda: jax.block_until_ready(compiled(Lh, Dinv)), reps=3)
+        outs[name] = np.asarray(out)
+        csv_row(f"selinv/sweep_{name}_trace", t_trace * 1e6,
+                f"nb={nb} hlo_lines={hlo_lines}")
+        csv_row(f"selinv/sweep_{name}_compile", t_compile * 1e6, f"nb={nb}")
+        csv_row(f"selinv/sweep_{name}_trace_compile",
+                (t_trace + t_compile) * 1e6, f"nb={nb}")
+        csv_row(f"selinv/sweep_{name}_run", dt * 1e6, f"nb={nb}")
+    err = float(abs(outs["ir"] - outs["unrolled"]).max())
+    csv_row("selinv/sweep_ir_vs_unrolled_maxdiff", 0.0, f"err={err:.2e}")
+    assert err < 1e-4, err
     return True
 
 
 if __name__ == "__main__":
-    run(full=True)
+    if "--ir-compare" in sys.argv:
+        # _run_ir_compare re-execs with 8 host devices when needed
+        _run_ir_compare(full="--full" in sys.argv)
+    else:
+        run(full="--full" in sys.argv)

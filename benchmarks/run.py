@@ -1,10 +1,12 @@
 """Benchmark driver — one module per paper table/figure plus kernel and
 system microbenches. Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json PATH]
 
 ``--full`` uses paper-scale matrices (minutes); default sizes finish in
-~2-4 minutes on one CPU core.
+~2-4 minutes on one CPU core. ``--json BENCH_pselinv.json`` additionally
+writes every row ({name, us_per_call, derived}) as JSON so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows as JSON (e.g. BENCH_pselinv.json)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig5,fig8,fig9,kernels,"
                          "selinv,treecomm")
@@ -43,6 +47,15 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc()
             failed.append((name, repr(e)))
+    if args.json:
+        import json
+
+        from .common import RESULTS
+        with open(args.json, "w") as f:
+            json.dump({"benches": RESULTS,
+                       "failed": [n for n, _ in failed]}, f, indent=2)
+        print(f"[bench] wrote {len(RESULTS)} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         for name, err in failed:
             print(f"{name},FAILED,{err}", file=sys.stderr)

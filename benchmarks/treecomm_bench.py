@@ -12,9 +12,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm.hierarchical import hierarchical_allreduce
+from repro.compat import shard_map
 from repro.core.trees import TreeKind
 
-from .common import csv_row
+from .common import csv_row, reemit_child_rows
 
 
 def run(full: bool = False):
@@ -31,7 +32,7 @@ def run(full: bool = False):
             [sys.executable, "-m", "benchmarks.treecomm_bench"]
             + (["--full"] if full else []),
             env=env, cwd=root, capture_output=True, text=True, timeout=600)
-        print(r.stdout, end="")
+        reemit_child_rows(r.stdout)
         if r.returncode != 0:
             raise RuntimeError(r.stderr[-2000:])
         return None
@@ -54,7 +55,7 @@ def run(full: bool = False):
     from repro.launch.dryrun import collective_bytes
     results = {}
     for name, f in (("flat_psum", flat), ("hier_tree", tree)):
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P("pod", "data"),
+        sm = shard_map(f, mesh=mesh, in_specs=P("pod", "data"),
                            out_specs=P("pod", "data"))
         txt = jax.jit(sm).lower(x).compile().as_text()
         cb = collective_bytes(txt)
@@ -62,9 +63,9 @@ def run(full: bool = False):
         csv_row(f"treecomm/{name}", 0.0,
                 " ".join(f"{k}={v/1e3:.1f}KB" for k, v in cb.items()))
         # numerics must agree
-    a = jax.jit(jax.shard_map(flat, mesh=mesh, in_specs=P("pod", "data"),
+    a = jax.jit(shard_map(flat, mesh=mesh, in_specs=P("pod", "data"),
                               out_specs=P("pod", "data")))(x + 1.0)
-    b = jax.jit(jax.shard_map(tree, mesh=mesh, in_specs=P("pod", "data"),
+    b = jax.jit(shard_map(tree, mesh=mesh, in_specs=P("pod", "data"),
                               out_specs=P("pod", "data")))(x + 1.0)
     assert np.allclose(np.asarray(a), np.asarray(b))
     csv_row("treecomm/equivalence", 0.0, "tree == psum: True")

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm.hierarchical import hierarchical_allreduce
+from repro.compat import shard_map
 from repro.core.trees import TreeKind
 from repro.launch.dryrun import collective_bytes
 
@@ -43,7 +44,7 @@ def main():
 
     outs = {}
     for name, f in (("tree", grads_tree), ("psum", grads_psum)):
-        jf = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", "data"),
+        jf = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod", "data"),
                                    out_specs=P("pod", "data")))
         compiled = jf.lower(x).compile()
         outs[name] = np.asarray(jf(x))

@@ -120,29 +120,18 @@ def batched_rounds(trees: Sequence[Tuple[CommTree, int]], op: str
     interleave their (src, dst) pairs in the same ppermute, so one HLO
     collective-permute round carries every concurrent collective's
     messages for that step.
+
+    The merge itself (broadcasts left-aligned, reductions right-aligned
+    so every root combines on the last round) and the disjointness check
+    (ValueError naming the colliding pairs) are the CommPlan IR's
+    :func:`repro.core.plan.merge_round_lists` — one implementation for
+    the executor, the simulator, and these reusable collectives.
     """
+    from repro.core.plan import merge_round_lists
+
     per_tree = []
     for tree, off in trees:
         rounds = tree.bcast_rounds() if op == "bcast" else tree.reduce_rounds()
         per_tree.append([[(s + off, d + off) for (s, d) in rnd]
                          for rnd in rounds])
-    nrounds = max((len(r) for r in per_tree), default=0)
-    merged: List[List[Tuple[int, int]]] = [[] for _ in range(nrounds)]
-    for rounds in per_tree:
-        if op == "bcast":
-            for i, rnd in enumerate(rounds):
-                merged[i].extend(rnd)
-        else:
-            # right-align reductions so every tree's root finishes on the
-            # last round (leaves of shallow trees start later)
-            shift = nrounds - len(rounds)
-            for i, rnd in enumerate(rounds):
-                merged[i + shift].extend(rnd)
-    # a device may source at most one transfer per ppermute; trees over
-    # disjoint groups guarantee that — verify in debug mode
-    for rnd in merged:
-        srcs = [s for s, _ in rnd]
-        dsts = [d for _, d in rnd]
-        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
-            raise ValueError("batched trees are not disjoint within a round")
-    return merged
+    return merge_round_lists(per_tree, op)

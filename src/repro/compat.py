@@ -1,0 +1,42 @@
+"""Version compatibility shims for the JAX surface this repo touches.
+
+Two APIs moved/changed shape across the JAX versions we support:
+
+* ``shard_map`` — exported as ``jax.shard_map`` on newer releases, lives
+  in ``jax.experimental.shard_map`` on older ones (e.g. 0.4.x).  Import
+  :func:`shard_map` from here everywhere instead of touching ``jax``
+  directly.
+* ``Compiled.cost_analysis()`` — returns a single dict on new JAX, a
+  per-computation *list* of dicts on older releases.  Use
+  :func:`cost_analysis_dict` to always get one flat dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+try:  # JAX >= 0.4.35 with the top-level export
+    shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # older JAX: experimental home
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled: Any) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a single flat dict
+    (older JAX returns a list with one entry per computation)."""
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for entry in cost:
+            for k, v in (entry or {}).items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0.0) + float(v)
+                else:
+                    merged.setdefault(k, v)
+        return merged
+    return dict(cost)

@@ -1,0 +1,531 @@
+"""CommPlan — the single static IR behind every PSelInv schedule consumer.
+
+One layering (host plan → device executor → simulator):
+
+1. ``core/schedule.pselinv_events`` enumerates the *semantic* restricted
+   collectives of Algorithm 1 (what must be communicated, by whom).
+2. :func:`build_plan` lowers that enumeration ONCE into a
+   :class:`CommPlan`: per collective a concrete :class:`~.trees.CommTree`
+   (kind/tag-deterministic, in **global rank space**), per-edge byte
+   counts, and the elimination-tree level of every supernode — supernodes
+   at the same level are independent and get batched into shared rounds
+   (the paper's asynchronous pipelining, §3).
+3. Consumers:
+
+   * ``core/simulator.volumes`` / ``simulate`` walk ``CommPlan.ops``
+     directly — the bytes they account are the bytes of the very trees
+     the executor runs, *by construction*;
+   * ``core/pselinv_dist.make_sweep`` consumes the :class:`ExecPlan`
+     produced by :func:`compile_exec`: dense per-device index tables
+     (gather slot, scatter slot, receive mask, ppermute pairs) that
+     replace per-pair ``jnp.where`` chains with O(1) table lookups;
+   * ``comm/treecomm.batched_rounds`` delegates its round merging to
+     :func:`merge_round_lists`.
+
+Adding a new tree kind therefore means: extend ``core/trees.build_tree``
+— every consumer (simulator, executor, reusable collectives) picks it up
+through :func:`tree_for` with zero schedule drift.
+
+Executor slot layout (uniform supernode width ``b``; ``nb`` padded so
+``pr | nb`` and ``pc | nb``): global block (I, J) lives on device
+``(I % pr, J % pc)`` at flat local slot ``(I//pr)*nbc + J//pc``; the
+level-stacked Û buffer keys slot ``k*nbc + I//pc`` and the partial-product
+buffer ``k*nbr + J//pr`` for the level's k-th supernode.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .schedule import (BYTES_PER_ELT, CommEvent, ComputeTask, Grid2D,
+                       pselinv_events)
+from .symbolic import BlockStructure
+from .trees import CommTree, TreeKind, build_tree, cached_tree, stable_hash
+
+__all__ = [
+    "PlanOp", "CommPlan", "build_plan", "tree_for", "merge_round_lists",
+    "pack_edges", "CommRound", "LocalRound", "LevelExec", "ExecPlan",
+    "compile_exec", "exec_byte_counts", "etree_levels",
+]
+
+
+# ---------------------------------------------------------------------------
+# tree construction (the one place a schedule becomes a concrete tree)
+# ---------------------------------------------------------------------------
+
+def tree_for(kind: TreeKind, root: int, participants: Sequence[int],
+             tag: int) -> CommTree:
+    """The canonical collective → tree lowering. FLAT/BINARY trees depend
+    only on the participant set (memoized); SHIFTED/HYBRID decorrelate
+    concurrent collectives through the tag-seeded rotation."""
+    receivers = tuple(r for r in participants if r != root)
+    if kind in (TreeKind.FLAT, TreeKind.BINARY):
+        return cached_tree(kind.value, root, receivers, 0)
+    return build_tree(kind, root, receivers, tag=tag)
+
+
+def merge_round_lists(per_tree: Sequence[List[List[Tuple[int, int]]]],
+                      op: str) -> List[List[Tuple[int, int]]]:
+    """Merge several *disjoint-group* collectives' per-round (src, dst)
+    edge lists into shared rounds: broadcasts left-aligned (roots fire
+    first), reductions right-aligned (every root combines on the last
+    round). Raises ``ValueError`` naming the colliding pairs if the trees
+    are not disjoint within a round — a device may source/sink at most one
+    transfer per ``ppermute``."""
+    n = max((len(r) for r in per_tree), default=0)
+    merged: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+    for rounds in per_tree:
+        shift = 0 if op == "bcast" else n - len(rounds)
+        for i, rnd in enumerate(rounds):
+            merged[i + shift].extend(rnd)
+    for i, rnd in enumerate(merged):
+        srcs = [s for s, _ in rnd]
+        dsts = [d for _, d in rnd]
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            dup_s = sorted({s for s in srcs if srcs.count(s) > 1})
+            dup_d = sorted({d for d in dsts if dsts.count(d) > 1})
+            bad = [(s, d) for (s, d) in rnd
+                   if s in dup_s or d in dup_d]
+            raise ValueError(
+                f"merged trees are not disjoint in round {i}: pairs {bad} "
+                f"reuse sources {dup_s} / destinations {dup_d}")
+    return merged
+
+
+def etree_levels(bs: BlockStructure) -> np.ndarray:
+    """Depth of every supernode in the block elimination tree (roots at
+    level 0). Supernodes at equal depth are independent in the
+    selected-inversion sweep: struct(K) ⊆ ancestors(K), all at strictly
+    smaller depth."""
+    nsuper = bs.nsuper
+    level = np.full(nsuper, -1, dtype=np.int64)
+    for K in range(nsuper - 1, -1, -1):
+        p = int(bs.parent[K])
+        level[K] = 0 if p < 0 else level[p] + 1
+    # parent(K) > K, so a reverse scan sees parents first
+    return level
+
+
+# ---------------------------------------------------------------------------
+# the IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlanOp:
+    """One restricted collective with its concrete tree.
+
+    ``exec_only`` marks the symmetric-case bookkeeping transfers
+    (``xfer-out`` transpose handoff, ``diag-reduce``) that the executable
+    sweep performs but the paper's volume accounting (§4.1) does not
+    report — ``volumes``/``simulate`` skip them."""
+    kind: str
+    supernode: int
+    level: int
+    root: int
+    participants: Tuple[int, ...]
+    nbytes: float
+    tag: int
+    tree: CommTree
+    block: int = -1
+    consumes: int = -1
+    exec_only: bool = False
+
+
+@dataclass
+class CommPlan:
+    """The static IR: every collective of one PSelInv pass, plus the
+    elimination-tree level structure the executor pipelines over."""
+    bs: BlockStructure
+    grid: Grid2D
+    kind: TreeKind
+    nb: int                          # supernode count incl. grid padding
+    ops: List[PlanOp]
+    tasks: List[ComputeTask]
+    level_of: np.ndarray             # (nsuper,)
+    sweep_levels: List[List[int]]    # per level: supernodes with work
+    diag_only: List[int]             # empty-struct supernodes (+ padding)
+
+    def ops_by_supernode(self) -> Dict[int, List[PlanOp]]:
+        out: Dict[int, List[PlanOp]] = defaultdict(list)
+        for op in self.ops:
+            out[op.supernode].append(op)
+        return dict(out)
+
+
+def build_plan(bs: BlockStructure, grid: Grid2D, kind: TreeKind,
+               nb: int | None = None) -> CommPlan:
+    """Lower the event enumeration into the CommPlan IR (trees built once,
+    here, for every consumer)."""
+    nsuper = bs.nsuper
+    nb = nsuper if nb is None else int(nb)
+    if nb < nsuper:
+        raise ValueError(f"nb={nb} < nsuper={nsuper}")
+    level = etree_levels(bs)
+    w = bs.widths()
+    pr, pc = grid.pr, grid.pc
+
+    events, tasks = pselinv_events(bs, grid)
+    ops: List[PlanOp] = []
+    for ev in events:
+        ops.append(PlanOp(
+            kind=ev.kind, supernode=ev.supernode,
+            level=int(level[ev.supernode]), root=ev.root,
+            participants=ev.participants, nbytes=ev.nbytes, tag=ev.tag,
+            tree=tree_for(kind, ev.root, ev.participants, ev.tag),
+            block=ev.block, consumes=ev.consumes))
+
+    # symmetric-case executor transfers (paper implementation detail:
+    # A⁻¹(K,J) = A⁻¹(J,K)ᵀ is materialized by a transpose handoff, and the
+    # diagonal correction Σ A⁻¹(K,I)·L̂(I,K) is reduced within row K%pr)
+    for K in range(nsuper):
+        C = [int(i) for i in bs.struct[K]]
+        if not C:
+            continue
+        wk = float(w[K])
+        krow, kcol = K % pr, K % pc
+        for J in C:
+            src = grid.owner(J, K)
+            dst = grid.owner(K, J)
+            if src == dst:
+                continue
+            parts = tuple(sorted({src, dst}))
+            tag = (K << 20) ^ (J << 2) ^ 3
+            ops.append(PlanOp(
+                kind="xfer-out", supernode=K, level=int(level[K]),
+                root=src, participants=parts,
+                nbytes=float(w[J]) * wk * BYTES_PER_ELT, tag=tag,
+                tree=tree_for(TreeKind.FLAT, src, parts, tag),
+                block=J, exec_only=True))
+        cols = sorted({I % pc for I in C} | {kcol})
+        if len(cols) > 1:
+            root = grid.owner(K, K)
+            parts = tuple(sorted(krow * pc + c for c in cols))
+            tag = stable_hash(K, 0xD)
+            ops.append(PlanOp(
+                kind="diag-reduce", supernode=K, level=int(level[K]),
+                root=root, participants=parts,
+                nbytes=wk * wk * BYTES_PER_ELT, tag=tag,
+                tree=tree_for(kind, root, parts, tag),
+                block=K, exec_only=True))
+
+    nlev = int(level.max()) + 1 if nsuper else 0
+    sweep_levels: List[List[int]] = [[] for _ in range(nlev)]
+    diag_only: List[int] = []
+    for K in range(nsuper):
+        if len(bs.struct[K]):
+            sweep_levels[int(level[K])].append(K)
+        else:
+            diag_only.append(K)
+    diag_only.extend(range(nsuper, nb))
+    # within a level, keep reverse elimination order (pure aesthetics —
+    # same-level supernodes are independent)
+    sweep_levels = [sorted(l, reverse=True) for l in sweep_levels if l]
+
+    return CommPlan(bs=bs, grid=grid, kind=kind, nb=nb, ops=ops,
+                    tasks=tasks, level_of=level,
+                    sweep_levels=sweep_levels, diag_only=diag_only)
+
+
+# ---------------------------------------------------------------------------
+# executor compilation: ops -> packed rounds -> dense device tables
+# ---------------------------------------------------------------------------
+
+# an edge is (src_dev, dst_dev, src_slot, dst_slot, nbytes)
+Edge = Tuple[int, int, int, int, float]
+
+
+def pack_edges(edges: Sequence[Edge]) -> List[List[Edge]]:
+    """Greedy-pack edges into ppermute rounds: per round each device
+    sources at most one transfer and sinks at most one transfer."""
+    rounds: List[List[Edge]] = []
+    for e in edges:
+        for rnd in rounds:
+            if all(e[0] != q[0] and e[1] != q[1] for q in rnd):
+                rnd.append(e)
+                break
+        else:
+            rounds.append([e])
+    return rounds
+
+
+@dataclass
+class CommRound:
+    """One ppermute with per-device gather/scatter tables.
+
+    ``slots[:, 0]`` is the flat gather index a sending device reads
+    (don't-care 0 for non-senders — ppermute drops their payload);
+    ``slots[:, 1]`` the flat scatter index a receiving device writes.
+    Non-receivers point at the buffer's **trash slot** (index = buffer
+    length): the executor allocates every writable buffer one block
+    larger, so no receive mask and no read-modify-write select is needed
+    — a write either lands or falls into the trash block."""
+    perm: List[Tuple[int, int]]
+    slots: np.ndarray         # (P, 2) int32 — [gather, scatter]
+    edges: List[Edge] = field(default_factory=list)
+
+
+@dataclass
+class LocalRound:
+    """Owner-local copy (src device == dst device): no communication,
+    same gather/scatter table shape as :class:`CommRound`."""
+    slots: np.ndarray         # (P, 2) int32
+
+
+def _round_tables(edges: Sequence[Edge], P: int, trash: int) -> CommRound:
+    slots = np.zeros((P, 2), np.int32)
+    slots[:, 1] = trash
+    perm = []
+    for (s, d, ss, ds, _nb) in edges:
+        perm.append((s, d))
+        slots[s, 0] = ss
+        slots[d, 1] = ds
+    return CommRound(perm=perm, slots=slots, edges=list(edges))
+
+
+def _local_rounds(ops: Sequence[Tuple[int, int, int]], P: int, trash: int
+                  ) -> List[LocalRound]:
+    """Pack (dev, src_slot, dst_slot) copies, one per device per round
+    (an owner-local copy is an edge with src device == dst device)."""
+    out = []
+    for rnd in pack_edges([(dev, dev, ss, ds, 0.0)
+                           for (dev, ss, ds) in ops]):
+        slots = np.zeros((P, 2), np.int32)
+        slots[:, 1] = trash
+        for (dev, _d, ss, ds, _nb) in rnd:
+            slots[dev, 0] = ss
+            slots[dev, 1] = ds
+        out.append(LocalRound(slots=slots))
+    return out
+
+
+def _schedule_tree_edges(per_op: Sequence[List[List[Edge]]], align: str,
+                         P: int, trash: int) -> List[CommRound]:
+    """Earliest-fire list scheduling of several collectives' tree edges
+    into shared executable rounds (the asynchronous pipelining: an edge
+    fires as soon as (1) its data dependency within its own tree is
+    satisfied — for a broadcast the edge that delivered to its source,
+    for a reduction every edge combining into its source — and (2) a
+    ppermute slot is free, i.e. its source/destination device is not
+    already used this round). Rounds are executed as barriers, so firing
+    strictly after all dependencies is sufficient for correctness."""
+    items: List[Tuple[Edge, List[int]]] = []
+    for rounds in per_op:
+        base = len(items)
+        delivered: Dict[int, int] = {}     # node -> item index that fed it
+        into: Dict[int, List[int]] = defaultdict(list)
+        flat = [e for rnd in rounds for e in rnd]
+        if align == "left":                # broadcast orientation
+            for j, e in enumerate(flat):
+                delivered[e[1]] = base + j
+            for j, e in enumerate(flat):
+                dep = delivered.get(e[0])
+                items.append((e, [dep] if dep is not None else []))
+        else:                              # reduce orientation
+            for j, e in enumerate(flat):
+                into[e[1]].append(base + j)
+            for e in flat:
+                items.append((e, list(into.get(e[0], ()))))
+
+    fired = [None] * len(items)
+    remaining = list(range(len(items)))
+    out: List[CommRound] = []
+    while remaining:
+        used_s, used_d, this = set(), set(), []
+        for i in remaining:
+            e, deps = items[i]
+            if any(fired[d] is None for d in deps):
+                continue
+            if e[0] in used_s or e[1] in used_d:
+                continue
+            this.append(i)
+            used_s.add(e[0])
+            used_d.add(e[1])
+        if not this:
+            raise ValueError("cyclic edge dependencies in tree schedule")
+        for i in this:
+            fired[i] = len(out)
+        remaining = [i for i in remaining if fired[i] is None]
+        out.append(_round_tables([items[i][0] for i in this], P, trash))
+    return out
+
+
+@dataclass
+class LevelExec:
+    """Dense tables driving one elimination-tree level of the sweep."""
+    Ks: np.ndarray                   # (nk,) supernode ids
+    xfer_in_local: List[LocalRound]  # Lh -> Uh (transpose), owner-local
+    xfer_in: List[CommRound]         # Lh -> Uh (transpose), p2p
+    bcast: List[CommRound]           # Uh -> Uh down grid columns
+    cmask: np.ndarray                # (pc, nk, nbc) struct mask
+    reduce: List[CommRound]          # partial -> partial along grid rows
+    kcs: np.ndarray                  # (nk,) K // pc
+    col_write_row: np.ndarray        # (pr, nk, nbr)
+    col_write_col: np.ndarray        # (pc, nk)
+    xfer_out_local: List[LocalRound]
+    xfer_out: List[CommRound]        # Ainv -> Ainv (transpose), p2p
+    krs: np.ndarray                  # (nk,) K // pr
+    diag_rowmask: np.ndarray         # (pr, nk)
+    diag_reduce: List[CommRound]     # S -> S within row K%pr
+    diag_root: np.ndarray            # (nk,) owner(K,K) device id
+    diag_slot: np.ndarray            # (nk,) flat Ainv slot of (K,K)
+
+
+@dataclass
+class ExecPlan:
+    nb: int
+    pr: int
+    pc: int
+    diag_set_root: np.ndarray        # (m,) device ids, empty-struct diag
+    diag_set_slot: np.ndarray        # (m,) flat Ainv slots
+    levels: List[LevelExec]
+
+    @property
+    def nbr(self) -> int:
+        return self.nb // self.pr
+
+    @property
+    def nbc(self) -> int:
+        return self.nb // self.pc
+
+
+def compile_exec(plan: CommPlan) -> ExecPlan:
+    """Compile the IR into the level-pipelined executable form: every
+    collective of a level shares rounds with its independent siblings."""
+    grid, nb = plan.grid, plan.nb
+    pr, pc, P = grid.pr, grid.pc, grid.size
+    if nb % pr or nb % pc:
+        raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
+    nbr, nbc = nb // pr, nb // pc
+    bs = plan.bs
+    by_sn = plan.ops_by_supernode()
+
+    droot = np.array([grid.owner(K, K) for K in plan.diag_only],
+                     dtype=np.int32)
+    dslot = np.array([(K // pr) * nbc + K // pc for K in plan.diag_only],
+                     dtype=np.int32)
+
+    levels: List[LevelExec] = []
+    for Ks in plan.sweep_levels:
+        nk = len(Ks)
+        k_of = {K: k for k, K in enumerate(Ks)}
+        xi_local: List[Tuple[int, int, int]] = []
+        xi_edges: List[Edge] = []
+        bcast_ops: List[List[List[Edge]]] = []
+        red_ops: List[List[List[Edge]]] = []
+        xo_local: List[Tuple[int, int, int]] = []
+        xo_edges: List[Edge] = []
+        dred_ops: List[List[List[Edge]]] = []
+        cmask = np.zeros((pc, nk, nbc))
+        cw_row = np.zeros((pr, nk, nbr))
+        cw_col = np.zeros((pc, nk))
+        d_rowmask = np.zeros((pr, nk))
+
+        for K in Ks:
+            k = k_of[K]
+            C = [int(i) for i in bs.struct[K]]
+            for I in C:
+                cmask[I % pc, k, I // pc] = 1.0
+                cw_row[I % pr, k, I // pr] = 1.0
+                # owner-local transfers are layout copies, not comm ops
+                if grid.owner(I, K) == grid.owner(K, I):
+                    xi_local.append((grid.owner(I, K),
+                                     (I // pr) * nbc + K // pc,
+                                     k * nbc + I // pc))
+                    xo_local.append((grid.owner(I, K),
+                                     (I // pr) * nbc + K // pc,
+                                     (K // pr) * nbc + I // pc))
+            cw_col[K % pc, k] = 1.0
+            d_rowmask[K % pr, k] = 1.0
+
+            for op in by_sn.get(K, ()):
+                if op.kind == "xfer":
+                    I = op.block
+                    dst = [r for r in op.participants if r != op.root][0]
+                    xi_edges.append((op.root, dst,
+                                     (I // pr) * nbc + K // pc,
+                                     k * nbc + I // pc, op.nbytes))
+                elif op.kind == "col-bcast":
+                    I = op.block
+                    slot = k * nbc + I // pc
+                    bcast_ops.append(
+                        [[(s, d, slot, slot, op.nbytes) for (s, d) in rnd]
+                         for rnd in op.tree.bcast_rounds()])
+                elif op.kind == "row-reduce":
+                    J = op.block
+                    slot = k * nbr + J // pr
+                    red_ops.append(
+                        [[(s, d, slot, slot, op.nbytes) for (s, d) in rnd]
+                         for rnd in op.tree.reduce_rounds()])
+                elif op.kind == "xfer-out":
+                    J = op.block
+                    dst = [r for r in op.participants if r != op.root][0]
+                    xo_edges.append((op.root, dst,
+                                     (J // pr) * nbc + K // pc,
+                                     (K // pr) * nbc + J // pc, op.nbytes))
+                elif op.kind == "diag-reduce":
+                    dred_ops.append(
+                        [[(s, d, k, k, op.nbytes) for (s, d) in rnd]
+                         for rnd in op.tree.reduce_rounds()])
+                elif op.kind == "diag-bcast":
+                    pass   # loop-1 normalization is absorbed on the host
+                           # (prepare_inputs ships L̂/D⁻¹ pre-normalized)
+                else:
+                    raise ValueError(
+                        f"compile_exec cannot lower op kind {op.kind!r} — "
+                        "teach it the new kind or the executed schedule "
+                        "silently drifts from the simulated one")
+
+        t_uh = nk * nbc           # trash slot of each writable buffer
+        t_pf = nk * nbr
+        t_ai = nbr * nbc
+        levels.append(LevelExec(
+            Ks=np.asarray(Ks, dtype=np.int64),
+            xfer_in_local=_local_rounds(xi_local, P, t_uh),
+            xfer_in=[_round_tables(r, P, t_uh)
+                     for r in pack_edges(xi_edges)],
+            bcast=_schedule_tree_edges(bcast_ops, "left", P, t_uh),
+            cmask=cmask,
+            reduce=_schedule_tree_edges(red_ops, "right", P, t_pf),
+            kcs=np.array([K // pc for K in Ks], dtype=np.int32),
+            col_write_row=cw_row, col_write_col=cw_col,
+            xfer_out_local=_local_rounds(xo_local, P, t_ai),
+            xfer_out=[_round_tables(r, P, t_ai)
+                      for r in pack_edges(xo_edges)],
+            krs=np.array([K // pr for K in Ks], dtype=np.int32),
+            diag_rowmask=d_rowmask,
+            diag_reduce=_schedule_tree_edges(dred_ops, "right", P, nk),
+            diag_root=np.array([grid.owner(K, K) for K in Ks],
+                               dtype=np.int32),
+            diag_slot=np.array([(K // pr) * nbc + K // pc for K in Ks],
+                               dtype=np.int32)))
+
+    return ExecPlan(nb=nb, pr=pr, pc=pc, diag_set_root=droot,
+                    diag_set_slot=dslot, levels=levels)
+
+
+def exec_byte_counts(ex: ExecPlan
+                     ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """Per-rank outgoing/incoming bytes by phase kind, summed over the
+    *compiled* rounds — the bytes the device program actually moves. The
+    equivalence test checks these against ``simulator.volumes`` (same
+    plan, independent accounting path)."""
+    P = ex.pr * ex.pc
+    out: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+    inc: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+
+    def add(kind: str, rounds: List[CommRound]):
+        for rnd in rounds:
+            for (s, d, _ss, _ds, nb_) in rnd.edges:
+                out[kind][s] += nb_
+                inc[kind][d] += nb_
+
+    for lv in ex.levels:
+        add("xfer", lv.xfer_in)
+        add("col-bcast", lv.bcast)
+        add("row-reduce", lv.reduce)
+        add("xfer-out", lv.xfer_out)
+        add("diag-reduce", lv.diag_reduce)
+    return dict(out), dict(inc)

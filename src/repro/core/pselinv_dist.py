@@ -2,34 +2,43 @@
 the paper's algorithm with tree-based restricted collectives.
 
 The selected-inversion sweep (Alg. 1, loop 2) runs as one SPMD program on
-a flattened ``pr × pc`` grid ("xy" axis), exactly mirroring the paper's
-communication structure (§2.2, Fig. 2):
+a flattened ``pr × pc`` grid ("xy" axis). Since this refactor the sweep
+is driven end-to-end by the **CommPlan IR** (`core/plan.py`) — the same
+plan object the simulator accounts, so the schedule that is *simulated*
+is the schedule that *runs*:
 
-  per supernode K (reverse elimination order):
-    (a) xfer-in    L̂(I,K) → owner of Û(K,I)        [p2p ppermute rounds]
-    (b) col-bcast  Û(K,I) down its grid column      [tree, restricted]
-    (1) local GEMM A⁻¹(J,I)·L̂(I,K)
-    (c) row-reduce partials onto owner of A⁻¹(J,K)  [tree, restricted]
+  host plan   ``build_plan``      events → trees → per-edge bytes
+  compile     ``compile_exec``    level batching → packed ppermute rounds
+                                  → dense per-device index tables
+  device      ``make_sweep``      table-driven gather / ppermute / scatter
+
+Per elimination-tree **level** (all supernodes at equal etree depth are
+independent — the paper's pipelining, executed rather than approximated):
+
+    (a) xfer-in    L̂(I,K) → owner of Û(K,I)        [p2p rounds, batched]
+    (b) col-bcast  Û(K,I) down its grid column      [trees, shared rounds]
+    (1) one masked block-GEMM for the whole level   [kernels.ops]
+    (c) row-reduce partials onto owner of A⁻¹(J,K)  [trees, shared rounds]
     (f) xfer-out   A⁻¹(J,K)ᵀ → A⁻¹(K,J) owner       [p2p, symmetric case]
     (2,3) diagonal update + restricted row reduce
 
+Every comm round is one ``lax.ppermute`` of a single (b, b) block with
+O(1) table lookups (``jnp.take`` + dynamic gather/scatter) — no per-pair
+``jnp.where`` chains — so trace/compile time stays flat in the number of
+concurrent collectives. The pre-IR per-supernode executor is kept as
+``build_program_unrolled``/``make_sweep_unrolled`` for the compile-time
+benchmark (``benchmarks/pselinv_bench.py``).
+
 Symmetric matrices (as the paper's implementation): Û(K,I) = L̂(I,K)ᵀ and
 A⁻¹(K,J) = A⁻¹(J,K)ᵀ — both identities hold blockwise for unpivoted LU.
-
 Data is dense-blocked with uniform supernode width ``b`` and explicit
-zeros for structurally-zero blocks: numerics are unaffected (zero blocks
-contribute zero), while the *communication* pattern is restricted to the
-true sparsity structure — the trees only span the participating subset,
-exactly like PSelInv.
-
-Trees for concurrent column/row groups are batched into shared ppermute
-rounds (several restricted collectives in flight per HLO collective-
-permute — the executable analogue of the paper's asynchronous pipelining).
+zeros for structurally-zero blocks: numerics are unaffected, while the
+*communication* pattern is restricted to the true sparsity structure.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,17 +46,214 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import shard_map
+from ..kernels.ops import pselinv_level_gemm
+from .plan import (CommPlan, CommRound, ExecPlan, LocalRound, build_plan,
+                   compile_exec, merge_round_lists)
 from .symbolic import BlockStructure, symbolic_factorize
 from .supernodal_lu import factorize
 from .selinv import normalize_factors
 from .trees import CommTree, TreeKind, build_tree, stable_hash
 
-__all__ = ["PSelInvProgram", "build_program", "prepare_inputs",
+__all__ = ["PSelInvProgram", "build_program", "build_program_unrolled",
+           "make_sweep", "make_sweep_unrolled", "prepare_inputs",
            "run_distributed", "gather_blocks"]
 
 
+@dataclass
+class PSelInvProgram:
+    """A compiled sweep: grid geometry + (IR path) the CommPlan and its
+    executable tables, or (legacy path) the per-supernode schedules."""
+    nb: int
+    b: int
+    pr: int
+    pc: int
+    kind: TreeKind
+    bs: BlockStructure
+    plan: Optional[CommPlan] = None
+    exec_plan: Optional[ExecPlan] = None
+    iters: Optional[list] = None        # legacy unrolled schedule
+
+    @property
+    def nbr(self) -> int:
+        return self.nb // self.pr
+
+    @property
+    def nbc(self) -> int:
+        return self.nb // self.pc
+
+
 # ---------------------------------------------------------------------------
-# static schedule construction (host side)
+# IR path: plan -> tables -> vectorized level-pipelined sweep
+# ---------------------------------------------------------------------------
+
+def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
+                  kind: TreeKind = TreeKind.SHIFTED) -> PSelInvProgram:
+    """Build the CommPlan IR and compile it to executable tables."""
+    assert nb % pr == 0 and nb % pc == 0
+    from .schedule import Grid2D
+    plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
+    return PSelInvProgram(nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs,
+                          plan=plan, exec_plan=compile_exec(plan))
+
+
+def _dyn(buf, i):
+    return lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+
+def _apply_comm_rounds(dst, rounds: Sequence[CommRound], idx, op: str,
+                       src=None, transpose: bool = False):
+    """Run packed single-block ppermute rounds: gather the sender's slot,
+    permute, scatter at the receiver's slot. ``src=None`` gathers from the
+    (updating) destination buffer — required for multi-round trees where
+    internal nodes forward data received in earlier rounds.
+
+    ``dst`` carries one extra trash block (see ``CommRound.slots``), so
+    non-receivers need no mask: their write lands in the trash slot. Each
+    round is a handful of lean ``lax.dynamic_*`` ops — trace size is flat
+    in the number of concurrent collectives."""
+    if not rounds:
+        return dst
+    # one fused (R, P, 2) table per phase — a single closed-over constant,
+    # and a single dynamic lookup of this device's (R, 2) slot column
+    tables = jnp.asarray(np.stack([r.slots for r in rounds]))
+    slots = lax.dynamic_index_in_dim(tables, idx, 1, keepdims=False)
+    for i, rnd in enumerate(rounds):
+        buf = dst if src is None else src
+        payload = _dyn(buf, slots[i, 0])
+        moved = lax.ppermute(payload, "xy", rnd.perm)
+        if transpose:
+            moved = jnp.swapaxes(moved, -1, -2)
+        if op != "set":
+            moved = moved + _dyn(dst, slots[i, 1])
+        dst = lax.dynamic_update_index_in_dim(dst, moved, slots[i, 1], 0)
+    return dst
+
+
+def _apply_local_rounds(dst, rounds: Sequence[LocalRound], idx,
+                        src=None, transpose: bool = False):
+    """Owner-local block copies (src owner == dst owner): same tables,
+    no communication; non-participants copy into the trash slot."""
+    if not rounds:
+        return dst
+    tables = jnp.asarray(np.stack([r.slots for r in rounds]))
+    slots = lax.dynamic_index_in_dim(tables, idx, 1, keepdims=False)
+    for i, rnd in enumerate(rounds):
+        buf = dst if src is None else src
+        blk = _dyn(buf, slots[i, 0])
+        if transpose:
+            blk = jnp.swapaxes(blk, -1, -2)
+        dst = lax.dynamic_update_index_in_dim(dst, blk, slots[i, 1], 0)
+    return dst
+
+
+def make_sweep(prog: PSelInvProgram):
+    """Build the level-pipelined SPMD sweep from the compiled IR tables.
+    Call inside shard_map over a 1-D mesh axis "xy" of size pr*pc, with
+    per-device blocks Lh: (nbr, nbc, b, b), Dinv: (nbr, nbc, b, b)."""
+    ex = prog.exec_plan
+    assert ex is not None, "build_program() the IR path first"
+    b, pr, pc = prog.b, prog.pr, prog.pc
+    nbr, nbc = ex.nbr, ex.nbc
+
+    def gi(buf, i):      # gather rows, bounds statically guaranteed
+        return buf.at[i].get(mode="promise_in_bounds")
+
+    def sweep(Lh, Dinv):
+        Lh = Lh[0]        # drop the size-1 sharded device axis
+        Dinv = Dinv[0]
+        idx = lax.axis_index("xy")
+        r = idx // pc
+        c = idx % pc
+        dtype = Lh.dtype
+        N = nbr * nbc
+        Lh_f = Lh.reshape(N, b, b)
+        Dinv_f = Dinv.reshape(N, b, b)
+        # one extra trash block: non-receiving devices scatter into it
+        Ainv_f = jnp.zeros((N + 1, b, b), dtype=dtype)
+
+        # structless supernodes (leaves without fill + grid padding):
+        # A⁻¹(K,K) = D(K)⁻¹ at the owner, one batched scatter
+        if len(ex.diag_set_root):
+            slots = jnp.asarray(ex.diag_set_slot)
+            m = (jnp.asarray(ex.diag_set_root) == idx).astype(dtype)
+            Ainv_f = Ainv_f.at[slots].add(
+                m[:, None, None] * gi(Dinv_f, slots),
+                mode="promise_in_bounds")
+
+        for lv in ex.levels:
+            nk = len(lv.Ks)
+
+            # ---- (a) xfer-in: build the level's stacked Û buffer -------
+            Uh = jnp.zeros((nk * nbc + 1, b, b), dtype=dtype)
+            Uh = _apply_local_rounds(Uh, lv.xfer_in_local, idx, src=Lh_f,
+                                     transpose=True)
+            Uh = _apply_comm_rounds(Uh, lv.xfer_in, idx, "set", src=Lh_f,
+                                    transpose=True)
+
+            # ---- (b) col-bcast down each grid column -------------------
+            Uh = _apply_comm_rounds(Uh, lv.bcast, idx, "set")
+
+            # ---- (1) one masked block-GEMM for the whole level ---------
+            cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
+            Uh_m = Uh[:-1].reshape(nk, nbc, b, b) * cm[:, :, None, None]
+            partial = pselinv_level_gemm(
+                Ainv_f[:-1].reshape(nbr, nbc, b, b), Uh_m)  # (nk, nbr, b, b)
+
+            # ---- (c) row-reduce onto the owners of A⁻¹(J,K) ------------
+            pf = jnp.concatenate(
+                [partial.reshape(nk * nbr, b, b),
+                 jnp.zeros((1, b, b), dtype=dtype)])
+            pf = _apply_comm_rounds(pf, lv.reduce, idx, "add")
+            partial = pf[:-1].reshape(nk, nbr, b, b)
+
+            # ---- write A⁻¹(C,K) for every K of the level ---------------
+            kcs = jnp.asarray(lv.kcs)
+            wr = jnp.take(jnp.asarray(lv.col_write_row, dtype=dtype), r,
+                          axis=0)                          # (nk, nbr)
+            wc = jnp.take(jnp.asarray(lv.col_write_col, dtype=dtype), c,
+                          axis=0)                          # (nk,)
+            w = jnp.transpose(wr * wc[:, None])            # (nbr, nk)
+            Ainv = Ainv_f[:-1].reshape(nbr, nbc, b, b)
+            old = Ainv.at[:, kcs].get(mode="promise_in_bounds")
+            new = -jnp.swapaxes(partial, 0, 1)             # (nbr, nk, b, b)
+            # masked delta + scatter-add: same-level K's write disjoint
+            # (device, slot) pairs, so duplicate kcs entries add zeros
+            Ainv = Ainv.at[:, kcs].add(w[:, :, None, None] * (new - old),
+                                       mode="promise_in_bounds")
+            Ainv_f = jnp.concatenate(
+                [Ainv.reshape(N, b, b), Ainv_f[N:]])
+
+            # ---- (f) xfer-out transposes A⁻¹(K,J) = A⁻¹(J,K)ᵀ ----------
+            Ainv_f = _apply_local_rounds(Ainv_f, lv.xfer_out_local, idx,
+                                         transpose=True)
+            Ainv_f = _apply_comm_rounds(Ainv_f, lv.xfer_out, idx, "set",
+                                        transpose=True)
+
+            # ---- (2,3) diagonal:  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
+            krs = jnp.asarray(lv.krs)
+            Arow = gi(Ainv_f[:-1].reshape(nbr, nbc, b, b), krs)
+            S = jnp.einsum("kjab,kjcb->kac",
+                           Arow * cm[:, :, None, None], Uh_m)
+            rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype), r,
+                          axis=0)                          # (nk,)
+            S = S * rm[:, None, None]
+            S = jnp.concatenate([S, jnp.zeros((1, b, b), dtype=dtype)])
+            S = _apply_comm_rounds(S, lv.diag_reduce, idx, "add")[:-1]
+            slots = jnp.asarray(lv.diag_slot)
+            m = (jnp.asarray(lv.diag_root) == idx).astype(dtype)
+            newd = gi(Dinv_f, slots) - jnp.swapaxes(S, -1, -2)
+            Ainv_f = Ainv_f.at[slots].add(
+                m[:, None, None] * (newd - gi(Ainv_f, slots)),
+                mode="promise_in_bounds")
+
+        return Ainv_f[:-1].reshape(nbr, nbc, b, b)[None]  # drop trash blk
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# legacy unrolled path (pre-IR executor, kept for the compile benchmark)
 # ---------------------------------------------------------------------------
 
 def _pack_rounds(pairs: List[Tuple[int, int, int]]):
@@ -65,24 +271,16 @@ def _pack_rounds(pairs: List[Tuple[int, int, int]]):
 
 
 def _merge_tree_rounds(trees: Sequence[Tuple[CommTree, callable]], op: str):
-    """Merge several disjoint-group trees into shared global-id rounds.
-    ``mapper`` translates tree coordinates to global device ids."""
+    """Merge several disjoint-group trees into shared global-id rounds
+    (``mapper`` translates tree coordinates to global device ids) —
+    delegates the merge + disjointness check to the IR's
+    :func:`~.plan.merge_round_lists`."""
     per_tree = []
     for tree, mapper in trees:
         rounds = tree.bcast_rounds() if op == "bcast" else tree.reduce_rounds()
         per_tree.append([[(mapper(s), mapper(d)) for (s, d) in rnd]
                          for rnd in rounds])
-    n = max((len(r) for r in per_tree), default=0)
-    merged: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
-    for rounds in per_tree:
-        shift = 0 if op == "bcast" else n - len(rounds)
-        for i, rnd in enumerate(rounds):
-            merged[i + shift].extend(rnd)
-    for rnd in merged:
-        srcs = [s for s, _ in rnd]
-        dsts = [d for _, d in rnd]
-        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
-    return merged
+    return merge_round_lists(per_tree, op)
 
 
 @dataclass
@@ -100,29 +298,12 @@ class _IterSchedule:
     row_mask: np.ndarray          # (NBr, pr)
 
 
-@dataclass
-class PSelInvProgram:
-    nb: int
-    b: int
-    pr: int
-    pc: int
-    kind: TreeKind
-    iters: List[_IterSchedule]
-    bs: BlockStructure
-
-    @property
-    def nbr(self) -> int:
-        return self.nb // self.pr
-
-    @property
-    def nbc(self) -> int:
-        return self.nb // self.pc
-
-
-def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
-                  kind: TreeKind = TreeKind.SHIFTED) -> PSelInvProgram:
-    """Precompute the full static communication schedule (trees, rounds,
-    masks) for every supernode iteration."""
+def build_program_unrolled(bs: BlockStructure, nb: int, b: int, pr: int,
+                           pc: int, kind: TreeKind = TreeKind.SHIFTED
+                           ) -> PSelInvProgram:
+    """The pre-IR per-supernode schedule (one tree per mesh column/row per
+    supernode, re-derived here rather than read from the CommPlan).
+    Retained as the baseline of the compile-time benchmark."""
     assert nb % pr == 0 and nb % pc == 0
     nbr, nbc = nb // pr, nb // pc
 
@@ -195,13 +376,9 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
             diag_reduce_rounds=diag_reduce_rounds,
             col_mask=col_mask, row_mask=row_mask))
 
-    return PSelInvProgram(nb=nb, b=b, pr=pr, pc=pc, kind=kind, iters=iters,
-                          bs=bs)
+    return PSelInvProgram(nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs,
+                          iters=iters)
 
-
-# ---------------------------------------------------------------------------
-# SPMD sweep (device side, inside shard_map over axis "xy")
-# ---------------------------------------------------------------------------
 
 def _apply_rounds(x, rounds, axis, op):
     idx = lax.axis_index(axis)
@@ -218,10 +395,11 @@ def _apply_rounds(x, rounds, axis, op):
     return x
 
 
-def make_sweep(prog: PSelInvProgram):
-    """Build the SPMD sweep callable. Call inside shard_map over a 1-D
-    mesh axis "xy" of size pr*pc, with per-device blocks
-    Lh: (nbr, nbc, b, b), Dinv: (nbr, nbc, b, b)."""
+def make_sweep_unrolled(prog: PSelInvProgram):
+    """The pre-IR sweep: per-supernode processing with per-pair
+    ``jnp.where`` chains. O(nb × rounds × pairs) trace size — the
+    benchmark baseline the IR executor is measured against."""
+    assert prog.iters is not None, "use build_program_unrolled()"
     nb, b, pr, pc = prog.nb, prog.b, prog.pr, prog.pc
     nbr, nbc = prog.nbr, prog.nbc
 
@@ -249,7 +427,6 @@ def make_sweep(prog: PSelInvProgram):
             Uh = jnp.zeros((nbc, b, b), dtype=dtype)
             for I in it.xfer_in_local:
                 dev = (I % pr) * pc + (K % pc)
-                assert dev == (K % pr) * pc + (I % pc)
                 Uh = Uh.at[I // pc].set(
                     jnp.where(idx == dev,
                               Lh[I // pr, kc].T, Uh[I // pc]))
@@ -319,9 +496,8 @@ def make_sweep(prog: PSelInvProgram):
 def prepare_inputs(A, b: int, pr: int, pc: int):
     """Factorize (host), normalize, and lay out dense-blocked shards.
 
-    Returns (prog_builder_args, Lh_sharded_global, Dinv_sharded_global)
-    where the arrays have shape (pr*pc, nbr, nbc, b, b) for in_specs
-    P("xy")."""
+    Returns (bs, nb, Lh_sharded_global, Dinv_sharded_global) where the
+    arrays have shape (pr*pc, nbr, nbc, b, b) for in_specs P("xy")."""
     import scipy.sparse as sp
     import scipy.linalg as sla
 
@@ -361,17 +537,24 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
 
 
 def run_distributed(A, b: int, pr: int, pc: int,
-                    kind: TreeKind = TreeKind.SHIFTED, dtype=jnp.float32):
-    """End-to-end distributed selected inversion on pr*pc devices."""
+                    kind: TreeKind = TreeKind.SHIFTED, dtype=jnp.float32,
+                    pipelined: bool = True):
+    """End-to-end distributed selected inversion on pr*pc devices.
+    ``pipelined=True`` runs the IR executor; ``False`` the legacy
+    unrolled sweep (same numerics, larger HLO)."""
     from jax.sharding import Mesh, PartitionSpec as P
 
     bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
-    prog = build_program(bs, nb, b, pr, pc, kind=kind)
-    sweep = make_sweep(prog)
+    if pipelined:
+        prog = build_program(bs, nb, b, pr, pc, kind=kind)
+        sweep = make_sweep(prog)
+    else:
+        prog = build_program_unrolled(bs, nb, b, pr, pc, kind=kind)
+        sweep = make_sweep_unrolled(prog)
 
     devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
     mesh = Mesh(devs, ("xy",))
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         sweep, mesh=mesh, in_specs=(P("xy"), P("xy")), out_specs=P("xy")))
     out = fn(jnp.asarray(Lh_s, dtype=dtype), jnp.asarray(Dinv_s, dtype=dtype))
     return np.asarray(out), prog

@@ -14,6 +14,12 @@ collectives PSelInv issues (paper §2.2/§3, Fig. 2):
 
 Block (I,J) is owned by grid processor (I mod Pr, J mod Pc) with rank
 ``row·Pc + col`` (SuperLU_DIST layout). Bytes assume float64.
+
+This module is the *enumeration front-end* of the CommPlan IR
+(`core/plan.py`): it decides **what** must be communicated;
+:func:`~.plan.build_plan` lowers these events — once, for every consumer
+— into concrete trees and executable rounds. Do not derive trees or
+rounds anywhere else.
 """
 from __future__ import annotations
 
@@ -63,6 +69,10 @@ class CommEvent:
     tag: int
     # index of the supernode whose A⁻¹ data this event consumes (dependency)
     consumes: int = -1
+    # supernode index of the block the event's payload carries (I for
+    # xfer/col-bcast, J for row-reduce, K for diag-bcast) — the CommPlan
+    # executor uses it to derive gather/scatter slots
+    block: int = -1
 
 
 @dataclass(frozen=True)
@@ -101,7 +111,7 @@ def pselinv_events(bs: BlockStructure, grid: Grid2D
                 events.append(CommEvent(
                     "diag-bcast", K, root, parts,
                     nbytes=wk * wk * BYTES_PER_ELT,
-                    tag=(K << 1) | 0, consumes=-1))
+                    tag=(K << 1) | 0, consumes=-1, block=K))
             for I in C:
                 tasks.append(ComputeTask(
                     "trsm", K, grid.owner(I, K),
@@ -116,7 +126,7 @@ def pselinv_events(bs: BlockStructure, grid: Grid2D
                 events.append(CommEvent(
                     "xfer", K, src, tuple(sorted({src, dst})),
                     nbytes=float(w[I]) * wk * BYTES_PER_ELT,
-                    tag=(K << 20) ^ I, consumes=-1))
+                    tag=(K << 20) ^ I, consumes=-1, block=I))
 
         # col-bcast: Û(K,I) broadcast down grid-column (I mod Pc) to the
         # owners of A⁻¹(J,I) for J in C
@@ -128,7 +138,7 @@ def pselinv_events(bs: BlockStructure, grid: Grid2D
                 events.append(CommEvent(
                     "col-bcast", K, root, parts,
                     nbytes=float(w[I]) * wk * BYTES_PER_ELT,
-                    tag=(K << 20) ^ (I << 1), consumes=I))
+                    tag=(K << 20) ^ (I << 1), consumes=I, block=I))
             # local GEMM at each owner of A⁻¹(J,I): (wJ x wI) @ (wI x wK)
             for J in C:
                 tasks.append(ComputeTask(
@@ -145,7 +155,7 @@ def pselinv_events(bs: BlockStructure, grid: Grid2D
                 events.append(CommEvent(
                     "row-reduce", K, root, parts,
                     nbytes=float(w[J]) * wk * BYTES_PER_ELT,
-                    tag=(K << 20) ^ (J << 1) ^ 1, consumes=-1))
+                    tag=(K << 20) ^ (J << 1) ^ 1, consumes=-1, block=J))
 
         # step 4/5 local work on the diagonal/row owners
         csum = float(sum(w[i] for i in C))
@@ -156,17 +166,19 @@ def pselinv_events(bs: BlockStructure, grid: Grid2D
     return events, tasks
 
 
-def pselinv_supernode_program(bs: BlockStructure, grid: Grid2D):
-    """Events/tasks grouped per supernode, in *reverse* elimination order
+def pselinv_supernode_program(bs: BlockStructure, grid: Grid2D,
+                              kind=None):
+    """Ops/tasks grouped per supernode, in *reverse* elimination order
     (the selected-inversion sweep), with the etree dependency:
     supernode K may start once every I ∈ struct(K) has finished.
-    Yields (K, deps, events_K, tasks_K)."""
-    events, tasks = pselinv_events(bs, grid)
-    by_sn_e: dict[int, list] = {}
+    Yields (K, deps, ops_K, tasks_K) — ops are the CommPlan IR's
+    :class:`~.plan.PlanOp` (tree kind defaults to SHIFTED)."""
+    from .plan import build_plan          # lazy: plan builds on this module
+    from .trees import TreeKind
+    plan = build_plan(bs, grid, kind or TreeKind.SHIFTED)
+    by_sn_e = plan.ops_by_supernode()
     by_sn_t: dict[int, list] = {}
-    for e in events:
-        by_sn_e.setdefault(e.supernode, []).append(e)
-    for t in tasks:
+    for t in plan.tasks:
         by_sn_t.setdefault(t.supernode, []).append(t)
     for K in range(bs.nsuper - 1, -1, -1):
         deps = [int(i) for i in bs.struct[K]]

@@ -2,9 +2,10 @@
 
 The container is CPU-only, so the paper's Edison (Cray XC30) wall-clock
 experiments are reproduced with a processor-timeline simulation driven by
-the *exact* comm-event schedule of `core.schedule` and the *exact* tree
-construction of `core.trees` — the same trees the executable ppermute
-lowering uses.
+the CommPlan IR of `core.plan` — the *same* plan object (same trees, same
+tags, same per-edge byte counts) that `core.pselinv_dist` compiles into
+the executable ppermute sweep, so simulated bytes equal executed bytes by
+construction (tested in tests/test_plan.py).
 
 Two modes:
 
@@ -28,12 +29,13 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .schedule import (BYTES_PER_ELT, CommEvent, ComputeTask, Grid2D,
-                       pselinv_events)
+from .plan import CommPlan, PlanOp, build_plan
+from .schedule import BYTES_PER_ELT, ComputeTask, Grid2D
 from .symbolic import BlockStructure
-from .trees import CommTree, TreeKind, build_tree, cached_tree
+from .trees import TreeKind, cached_tree
 
-__all__ = ["NetworkModel", "SimResult", "volumes", "volume_stats", "simulate"]
+__all__ = ["NetworkModel", "SimResult", "volumes", "volumes_from_plan",
+           "volume_stats", "simulate"]
 
 
 @dataclass(frozen=True)
@@ -70,11 +72,23 @@ class SimResult:
 # structural volume accounting (Table 1, Figs 4-7)
 # ---------------------------------------------------------------------------
 
-def _tree_for(kind: TreeKind, ev: CommEvent) -> CommTree:
-    receivers = tuple(r for r in ev.participants if r != ev.root)
-    if kind in (TreeKind.FLAT, TreeKind.BINARY):
-        return cached_tree(kind.value, ev.root, receivers, 0)
-    return build_tree(kind, ev.root, receivers, tag=ev.tag)
+def volumes_from_plan(plan: CommPlan
+                      ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """Per-rank outgoing/incoming bytes by op kind, read off the IR's
+    trees (``exec_only`` bookkeeping transfers are excluded — §4.1
+    reports the four algorithmic collectives)."""
+    size = plan.grid.size
+    out: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(size))
+    inc: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(size))
+    for op in plan.ops:
+        if op.exec_only:
+            continue
+        for src, kids in op.tree.children:
+            nk = len(kids)
+            out[op.kind][src] += nk * op.nbytes
+            for k in kids:
+                inc[op.kind][k] += op.nbytes
+    return dict(out), dict(inc)
 
 
 def volumes(bs: BlockStructure, grid: Grid2D, kind: TreeKind
@@ -85,17 +99,7 @@ def volumes(bs: BlockStructure, grid: Grid2D, kind: TreeKind
     sources; for reductions the mirrored tree makes the same edge count as
     *incoming* at the combining node (paper §4.1 reports received volume
     for Row-Reduce)."""
-    events, _ = pselinv_events(bs, grid)
-    out: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(grid.size))
-    inc: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(grid.size))
-    for ev in events:
-        tree = _tree_for(kind, ev)
-        for src, kids in tree.children:
-            nk = len(kids)
-            out[ev.kind][src] += nk * ev.nbytes
-            for k in kids:
-                inc[ev.kind][k] += ev.nbytes
-    return dict(out), dict(inc)
+    return volumes_from_plan(build_plan(bs, grid, kind))
 
 
 def _msgs_vector(kind: TreeKind, root: int, receivers: Tuple[int, ...],
@@ -255,9 +259,9 @@ def simulate(bs: BlockStructure, grid: Grid2D, kind: TreeKind,
     send_bytes: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
     recv_bytes: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
 
-    def run_bcast(ev: CommEvent, t_root: float) -> Dict[int, float]:
+    def run_bcast(ev: PlanOp, t_root: float) -> Dict[int, float]:
         """Propagate a broadcast; returns arrival time per rank."""
-        tree = _tree_for(kind, ev)
+        tree = ev.tree
         arrive = {ev.root: t_root}
         order = [ev.root]
         kmap = tree.children_map()
@@ -276,9 +280,9 @@ def simulate(bs: BlockStructure, grid: Grid2D, kind: TreeKind,
                 order.append(c)
         return arrive
 
-    def run_reduce(ev: CommEvent, ready: Dict[int, float]) -> float:
+    def run_reduce(ev: PlanOp, ready: Dict[int, float]) -> float:
         """Propagate a reduction (leaves -> root); returns root finish."""
-        tree = _tree_for(kind, ev)
+        tree = ev.tree
         kmap = tree.children_map()
 
         def finish(u: int) -> float:
@@ -297,12 +301,14 @@ def simulate(bs: BlockStructure, grid: Grid2D, kind: TreeKind,
 
         return finish(ev.root)
 
-    # -- group events/tasks by supernode ---------------------------------
-    events, tasks = pselinv_events(bs, grid)
-    ev_by_sn: Dict[int, List[CommEvent]] = defaultdict(list)
+    # -- group the IR's ops/tasks by supernode ----------------------------
+    plan = build_plan(bs, grid, kind)
+    tasks = plan.tasks
+    ev_by_sn: Dict[int, List[PlanOp]] = defaultdict(list)
     tk_by_sn: Dict[int, List[ComputeTask]] = defaultdict(list)
-    for e in events:
-        ev_by_sn[e.supernode].append(e)
+    for e in plan.ops:
+        if not e.exec_only:
+            ev_by_sn[e.supernode].append(e)
     for t in tasks:
         tk_by_sn[t.supernode].append(t)
 

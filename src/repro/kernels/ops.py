@@ -17,7 +17,7 @@ from .rmsnorm import rmsnorm_pallas
 from .trsm import trsm_pallas
 
 __all__ = ["block_gemm", "block_gemm_acc", "flash_attention", "rmsnorm",
-           "trsm", "use_interpret"]
+           "trsm", "use_interpret", "pselinv_level_gemm"]
 
 
 def use_interpret() -> bool:
@@ -35,6 +35,25 @@ def block_gemm_acc(acc, a, b, alpha=-1.0):
     """acc + alpha·(a@b) — the Schur-update form used by supernodal LU."""
     return acc + block_gemm_pallas(a, b, alpha=alpha,
                                    interpret=use_interpret())
+
+
+def pselinv_level_gemm(Ainv, Uh_m):
+    """The sweep's masked block-GEMM for one elimination-tree level:
+    ``partial[k, i] = Σ_j Ainv[i, j] @ Uh_m[k, j]ᵀ`` — all of a level's
+    supernodes in one 2-D tiled matmul (MXU-shaped on TPU via the Pallas
+    kernel; plain XLA dot as the CPU reference path).
+
+    Ainv: (nbr, nbc, b, b) local A⁻¹ block grid; Uh_m: (nk, nbc, b, b)
+    struct-masked Û stack. Returns (nk, nbr, b, b) partial products."""
+    nbr, nbc, b, _ = Ainv.shape
+    nk = Uh_m.shape[0]
+    a2 = Ainv.transpose(0, 2, 1, 3).reshape(nbr * b, nbc * b)
+    b2 = Uh_m.transpose(1, 3, 0, 2).reshape(nbc * b, nk * b)
+    if jax.default_backend() == "cpu":
+        p2 = jnp.dot(a2, b2)      # interpret-mode Pallas is trace-hostile
+    else:
+        p2 = block_gemm_pallas(a2, b2, interpret=use_interpret())
+    return p2.reshape(nbr, b, nk, b).transpose(2, 0, 1, 3)
 
 
 def flash_attention(q, k, v, causal=True):

@@ -20,6 +20,7 @@ from typing import Dict
 
 import jax
 
+from repro.compat import cost_analysis_dict
 from repro.config import SHAPES, get_config, list_configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (build_decode_step, build_prefill_step,
@@ -85,6 +86,11 @@ def _computation_multipliers(txt: str) -> Dict[str, int]:
 def _line_bytes(line: str, opname: str) -> int:
     lhs_rhs = line.split("=", 1)[1]
     head = lhs_rhs[:lhs_rhs.find(opname)]
+    if "%" in head:
+        # ``opname`` first appears inside the operand list (e.g.
+        # ``%add = f32[...] add(... %all-reduce.1)``): this line *uses* a
+        # collective result, it does not define one — don't count it.
+        return 0
     nbytes = 0
     for dt, dims in _SHAPE_RE.findall(head):
         if dt not in _DTYPE_BYTES:
@@ -171,7 +177,7 @@ def _run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     result = {

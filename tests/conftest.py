@@ -4,3 +4,22 @@ import sys
 # tests run single-device (the dry-run owns the 512-device trick);
 # distributed tests spawn subprocesses with their own XLA_FLAGS.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str, ndev: int = 8, x64: bool = False, timeout=420):
+    """Run a code snippet in a subprocess with its own XLA device count
+    (the main pytest process stays single-device)."""
+    import subprocess
+    import sys
+    import textwrap
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    if x64:
+        env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

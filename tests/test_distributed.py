@@ -1,31 +1,12 @@
 """Distributed tests — run in subprocesses with their own XLA device
 count (8 host devices), so the main pytest process stays single-device."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_sub(code: str, ndev: int = 8, x64: bool = False, timeout=420):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    if x64:
-        env["JAX_ENABLE_X64"] = "1"
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       env=env, capture_output=True, text=True,
-                       timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from conftest import run_sub
 
 
 def test_tree_collectives_match_builtins():
     run_sub("""
         import jax, numpy as np
+        from repro.compat import shard_map
         import jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.core.trees import TreeKind, build_tree
@@ -35,7 +16,7 @@ def test_tree_collectives_match_builtins():
         mesh = Mesh(np.array(devs).reshape(8), ("x",))
         x = jnp.arange(8.0 * 4).reshape(8, 4)
         members = [1, 3, 4, 6]
-        y = jax.jit(jax.shard_map(
+        y = jax.jit(shard_map(
             lambda v: subset_broadcast(v, "x", 3, members,
                                        TreeKind.SHIFTED, tag=7),
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
@@ -43,13 +24,13 @@ def test_tree_collectives_match_builtins():
         for r in range(8):
             exp = x[3] if r in members else x[r]
             assert np.allclose(y[r], exp)
-        z = jax.jit(jax.shard_map(
+        z = jax.jit(shard_map(
             lambda v: subset_reduce(v, "x", 4, members, TreeKind.BINARY),
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
         assert np.allclose(np.asarray(z)[4],
                            sum(np.asarray(x[m]) for m in members))
         tree = build_tree(TreeKind.SHIFTED, 2, [0,1,3,4,5,6,7], tag=13)
-        w = jax.jit(jax.shard_map(
+        w = jax.jit(shard_map(
             lambda v: tree_allreduce(v, "x", tree),
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
         assert np.allclose(np.asarray(w), np.asarray(x).sum(0))
@@ -60,6 +41,7 @@ def test_tree_collectives_match_builtins():
 def test_hierarchical_allreduce_matches_psum():
     run_sub("""
         import jax, numpy as np
+        from repro.compat import shard_map
         import jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.comm.hierarchical import hierarchical_allreduce
@@ -69,7 +51,7 @@ def test_hierarchical_allreduce_matches_psum():
         def ha(xs):
             return hierarchical_allreduce(
                 xs.reshape(8), "pod", "data", 2, 4, tag=3).reshape(1, 1, 8)
-        out = jax.jit(jax.shard_map(ha, mesh=mesh, in_specs=P("pod","data"),
+        out = jax.jit(shard_map(ha, mesh=mesh, in_specs=P("pod","data"),
                                     out_specs=P("pod","data")))(xx)
         assert np.allclose(np.asarray(out), np.asarray(xx).sum((0,1)))
         print("OK")
@@ -109,6 +91,7 @@ def test_grad_sync_tree_equals_psum():
     plain psum (the LM-training integration of the technique)."""
     run_sub("""
         import jax, numpy as np
+        from repro.compat import shard_map
         import jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.comm.hierarchical import hierarchical_allreduce
@@ -129,9 +112,9 @@ def test_grad_sync_tree_equals_psum():
             g = jax.grad(loss)(w, xb.reshape(1, 16))
             return jax.lax.psum(g, ("pod", "data")).reshape(1, 1, 16)
 
-        gt = jax.jit(jax.shard_map(lambda xb: step_tree(w, xb), mesh=mesh,
+        gt = jax.jit(shard_map(lambda xb: step_tree(w, xb), mesh=mesh,
                      in_specs=P("pod", "data"), out_specs=P("pod","data")))(x)
-        gp = jax.jit(jax.shard_map(lambda xb: step_psum(w, xb), mesh=mesh,
+        gp = jax.jit(shard_map(lambda xb: step_psum(w, xb), mesh=mesh,
                      in_specs=P("pod", "data"), out_specs=P("pod","data")))(x)
         assert np.allclose(np.asarray(gt), np.asarray(gp), rtol=1e-6)
         print("OK")

@@ -1,0 +1,152 @@
+"""CommPlan IR tests: the single-derivation guarantees.
+
+(a) bytes equivalence — per-rank byte counts summed over the *compiled*
+    executor rounds equal ``simulator.volumes`` on the same
+    structure/grid/tree-kind (simulated bytes == executed bytes);
+(b) oracle — the level-pipelined IR sweep matches the dense inverse on
+    the selected pattern for several (pr, pc, TreeKind) combinations,
+    and agrees with the legacy unrolled sweep;
+plus structural invariants of the level batching and the merged-round
+diagnostics.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from conftest import run_sub
+
+from repro.core import sparse
+from repro.core.plan import (build_plan, compile_exec, etree_levels,
+                             exec_byte_counts, merge_round_lists)
+from repro.core.schedule import Grid2D
+from repro.core.simulator import volumes
+from repro.core.symbolic import symbolic_factorize
+from repro.core.trees import TreeKind, build_tree
+
+@pytest.fixture(scope="module")
+def lap_bs():
+    A = sparse.laplacian_2d(12, 8)
+    return A, symbolic_factorize(sp.csr_matrix(A), max_supernode=8)
+
+
+@pytest.mark.parametrize("pr,pc", [(4, 2), (2, 2), (2, 4)])
+@pytest.mark.parametrize("kind",
+                         [TreeKind.FLAT, TreeKind.BINARY, TreeKind.SHIFTED])
+def test_exec_bytes_match_volumes(lap_bs, pr, pc, kind):
+    """The bytes the compiled device program moves are the bytes the
+    simulator accounts — same plan, independent accounting paths."""
+    _, bs = lap_bs
+    grid = Grid2D(pr, pc)
+    plan = build_plan(bs, grid, kind, nb=12)
+    out_e, inc_e = exec_byte_counts(compile_exec(plan))
+    out_v, inc_v = volumes(bs, grid, kind)
+    z = np.zeros(grid.size)
+    for k in ("xfer", "col-bcast"):
+        np.testing.assert_allclose(out_e.get(k, z), out_v.get(k, z))
+        np.testing.assert_allclose(inc_e.get(k, z), inc_v.get(k, z))
+    # volumes reports reductions in broadcast orientation (§4.1 counts
+    # received volume at the combining node): mirror to wire direction
+    np.testing.assert_allclose(out_e.get("row-reduce", z),
+                               inc_v.get("row-reduce", z))
+    np.testing.assert_allclose(inc_e.get("row-reduce", z),
+                               out_v.get("row-reduce", z))
+
+
+def test_levels_are_independent(lap_bs):
+    """Same-level supernodes never appear in each other's struct — the
+    condition that makes the level batching a legal reordering of the
+    reverse-elimination sweep."""
+    _, bs = lap_bs
+    level = etree_levels(bs)
+    for K in range(bs.nsuper):
+        for I in bs.struct[K]:
+            assert level[int(I)] < level[K]   # struct(K) ⊆ ancestors(K)
+
+
+def test_plan_padding_supernodes(lap_bs):
+    """Grid padding adds diag-only supernodes and no communication."""
+    _, bs = lap_bs
+    plan = build_plan(bs, Grid2D(3, 2), TreeKind.SHIFTED, nb=18)
+    assert plan.nb == 18
+    assert set(range(bs.nsuper, 18)) <= set(plan.diag_only)
+    assert all(op.supernode < bs.nsuper for op in plan.ops)
+    ex = compile_exec(plan)
+    assert len(ex.diag_set_root) == len(plan.diag_only)
+
+
+def test_packed_rounds_respect_ppermute_constraint(lap_bs):
+    """Every compiled round has unique sources and destinations."""
+    _, bs = lap_bs
+    plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=12)
+    ex = compile_exec(plan)
+    nrounds = 0
+    for lv in ex.levels:
+        for rounds in (lv.xfer_in, lv.bcast, lv.reduce, lv.xfer_out,
+                       lv.diag_reduce):
+            for rnd in rounds:
+                srcs = [s for s, _ in rnd.perm]
+                dsts = [d for _, d in rnd.perm]
+                assert len(set(srcs)) == len(srcs)
+                assert len(set(dsts)) == len(dsts)
+                nrounds += 1
+    assert nrounds > 0
+
+
+def test_merge_round_lists_collision_diagnostics():
+    """Non-disjoint trees raise ValueError naming the colliding pairs."""
+    t1 = build_tree(TreeKind.FLAT, 0, [1, 2])
+    t2 = build_tree(TreeKind.FLAT, 0, [3])
+    per_tree = [t1.bcast_rounds(), t2.bcast_rounds()]
+    with pytest.raises(ValueError) as ei:
+        merge_round_lists(per_tree, "bcast")
+    msg = str(ei.value)
+    assert "round 0" in msg and "(0, 1)" in msg and "(0, 3)" in msg
+
+
+def test_batched_rounds_uses_shared_merge():
+    """treecomm.batched_rounds delegates to the IR merge (disjoint trees
+    merge; overlapping trees get the diagnostic ValueError)."""
+    from repro.comm.treecomm import batched_rounds
+    t1 = build_tree(TreeKind.BINARY, 0, [1, 2, 3])
+    t2 = build_tree(TreeKind.BINARY, 0, [1, 2, 3])
+    merged = batched_rounds([(t1, 0), (t2, 4)], "bcast")
+    flat = [e for rnd in merged for e in rnd]
+    assert len(flat) == 6 and max(max(s, d) for s, d in flat) == 7
+    with pytest.raises(ValueError):
+        batched_rounds([(t1, 0), (t2, 0)], "bcast")
+
+
+def test_ir_sweep_matches_oracle_multi_grid():
+    """The level-pipelined IR sweep reproduces the dense inverse on the
+    selected pattern for two grid shapes / tree kinds, and agrees with
+    the legacy unrolled executor."""
+    run_sub("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.trees import TreeKind
+        from repro.core.pselinv_dist import run_distributed, gather_blocks
+        from repro.core.selinv import dense_selinv_oracle
+        A = sparse.laplacian_2d(12, 8)
+        ref = dense_selinv_oracle(A)
+        for (pr, pc, kind) in ((2, 4, TreeKind.SHIFTED),
+                               (2, 2, TreeKind.FLAT),
+                               (4, 2, TreeKind.BINARY)):
+            out, prog = run_distributed(A, b=8, pr=pr, pc=pc, kind=kind,
+                                        dtype=jnp.float64)
+            out_u, _ = run_distributed(A, b=8, pr=pr, pc=pc, kind=kind,
+                                       dtype=jnp.float64, pipelined=False)
+            assert abs(out - out_u).max() < 1e-12, (pr, pc, kind)
+            blocks = gather_blocks(out, prog)
+            bs = prog.bs
+            err = 0.0
+            for K in range(bs.nsuper):
+                err = max(err, abs(blocks[K, K]
+                                   - ref[K*8:(K+1)*8, K*8:(K+1)*8]).max())
+                for I in bs.struct[K]:
+                    I = int(I)
+                    err = max(err, abs(blocks[I, K]
+                                       - ref[I*8:(I+1)*8, K*8:(K+1)*8]).max())
+            assert err < 1e-9, (pr, pc, kind, err)
+        print("OK")
+    """, x64=True)

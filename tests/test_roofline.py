@@ -10,6 +10,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis_dict
 from repro.config import ShapeConfig, get_config, reduced_config
 from repro.launch.roofline import flops_model, model_flops, param_count
 from repro.models import get_model
@@ -43,7 +44,7 @@ def test_analytic_flops_vs_xla_cost_analysis():
 
     pshapes = api.param_shapes()
     toks = jax.ShapeDtypeStruct((2, 64), jnp.int32)
-    cost = jax.jit(fwd).lower(pshapes, toks).compile().cost_analysis()
+    cost = cost_analysis_dict(jax.jit(fwd).lower(pshapes, toks).compile())
     xla_flops = float(cost["flops"])
     anal = flops_model(cfg, shape)["flops"]
     assert anal == pytest.approx(xla_flops, rel=0.35), \
@@ -74,6 +75,7 @@ def test_collective_parser_trip_counts():
     env["PYTHONPATH"] = os.path.join(root, "src")
     code = textwrap.dedent("""
         import jax, numpy as np
+        from repro.compat import shard_map
         import jax.numpy as jnp
         from jax import lax
         from jax.sharding import Mesh, PartitionSpec as P
@@ -85,7 +87,7 @@ def test_collective_parser_trip_counts():
                 return c + lax.psum(c, "x"), None
             out, _ = lax.scan(body, v, None, length=7)
             return out
-        txt = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("x"),
+        txt = jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"),
                                     out_specs=P("x"))).lower(
             jnp.zeros((4, 128))).compile().as_text()
         cb = collective_bytes(txt)
