@@ -1,9 +1,11 @@
 """Selected-inversion numeric benchmark: numpy vs jax vs pallas backends
 (the supernodal GEMM/TRSM hot spots through the kernel layer), plus the
-unrolled-vs-IR distributed sweep comparison: trace (lower) time, XLA
-compile time, HLO size, and run time of the legacy per-supernode executor
-against the CommPlan level-pipelined executor on an 8-device host mesh
-(re-exec'd in a subprocess so the main process stays single-device)."""
+three-way distributed sweep comparison — legacy unrolled vs level-serial
+IR vs cross-level *overlapped* IR executor — on an 8-device host mesh
+(re-exec'd in a subprocess so the main process stays single-device):
+trace (lower) time, XLA compile time, HLO size, run time, ppermute round
+counts (the overlapped+coalesced stream must issue fewer), and the
+simulated executed-schedule times of both IR paths."""
 from __future__ import annotations
 
 import os
@@ -59,9 +61,14 @@ def _ir_compare_child(full: bool):
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.compat import shard_map
+    from repro.core.plan import ppermute_round_count
     from repro.core.pselinv_dist import (build_program,
                                          build_program_unrolled, make_sweep,
+                                         make_sweep_overlapped,
                                          make_sweep_unrolled, prepare_inputs)
+    from repro.core.simulator import (round_schedule_from_exec,
+                                      round_schedule_from_overlap,
+                                      simulate_schedule)
     from repro.core.trees import TreeKind
 
     nx = 32 if full else 16          # nb = nx (b=8 supernodes per grid row)
@@ -73,10 +80,15 @@ def _ir_compare_child(full: bool):
     Lh = jnp.asarray(Lh_s, jnp.float32)
     Dinv = jnp.asarray(Dinv_s, jnp.float32)
 
+    def build_overlap(bs, nb, b, pr, pc, kind):
+        return build_program(bs, nb, b, pr, pc, kind, overlap=True)
+
     outs = {}
+    rounds = {}
     for name, builder, mk in (
             ("unrolled", build_program_unrolled, make_sweep_unrolled),
-            ("ir", build_program, make_sweep)):
+            ("ir", build_program, make_sweep),
+            ("overlap", build_overlap, make_sweep_overlapped)):
         t0 = time.perf_counter()
         prog = builder(bs, nb, b, pr, pc, TreeKind.SHIFTED)
         sweep = mk(prog)
@@ -92,6 +104,17 @@ def _ir_compare_child(full: bool):
         out, dt = timed(
             lambda: jax.block_until_ready(compiled(Lh, Dinv)), reps=3)
         outs[name] = np.asarray(out)
+        if name == "ir":
+            rounds["ir"] = ppermute_round_count(prog.exec_plan)
+            sim = simulate_schedule(
+                round_schedule_from_exec(prog.exec_plan, prog.plan))
+        elif name == "overlap":
+            rounds["overlap"] = ppermute_round_count(prog.overlap_plan)
+            sim = simulate_schedule(
+                round_schedule_from_overlap(prog.overlap_plan, prog.plan))
+        if name in ("ir", "overlap"):
+            csv_row(f"selinv/sweep_{name}_simulated", sim.total_time * 1e6,
+                    f"nb={nb} rounds={rounds[name]}")
         csv_row(f"selinv/sweep_{name}_trace", t_trace * 1e6,
                 f"nb={nb} hlo_lines={hlo_lines}")
         csv_row(f"selinv/sweep_{name}_compile", t_compile * 1e6, f"nb={nb}")
@@ -101,6 +124,12 @@ def _ir_compare_child(full: bool):
     err = float(abs(outs["ir"] - outs["unrolled"]).max())
     csv_row("selinv/sweep_ir_vs_unrolled_maxdiff", 0.0, f"err={err:.2e}")
     assert err < 1e-4, err
+    err_o = float(abs(outs["overlap"] - outs["ir"]).max())
+    csv_row("selinv/sweep_overlap_vs_ir_maxdiff", 0.0, f"err={err_o:.2e}")
+    assert err_o < 1e-4, err_o
+    csv_row("selinv/sweep_ppermute_rounds", float(rounds["overlap"]),
+            f"nb={nb} serial={rounds['ir']} overlap={rounds['overlap']}")
+    assert rounds["overlap"] < rounds["ir"], rounds
     return True
 
 

@@ -31,6 +31,32 @@ Executor slot layout (uniform supernode width ``b``; ``nb`` padded so
 ``(I % pr, J % pc)`` at flat local slot ``(I//pr)*nbc + J//pc``; the
 level-stacked Û buffer keys slot ``k*nbc + I//pc`` and the partial-product
 buffer ``k*nbr + J//pr`` for the level's k-th supernode.
+
+**Overlapped round stream** (:func:`schedule_overlapped`): the level
+batching above still barriers between elimination-tree levels, although
+only the GEMM→reduce→write→diag chain is actually serialized by data —
+a level's xfer-in and col-bcast traffic depends on nothing but the
+static L̂ shard and its own tree edges. The overlapped lowering
+therefore drops the level barrier entirely: every comm edge, local copy
+and compute op of the whole sweep becomes a node of one dependence DAG
+(:func:`_overlap_items` documents the exact edge set), which is
+list-scheduled into a single global sequence of ppermute rounds over a
+flat per-device block **arena** (A⁻¹ | L̂ | per-level Û/partial/S stacks
+| trash). Compute fires at round boundaries; level L+1's xfer-in rides
+the same rounds as level L's reduce and diagonal traffic — the paper's
+§3 asynchronous pipelining *across* levels, not just within one.
+
+**Coalescing rule**: within one round, a (src, dst) device pair may
+carry up to ``coalesce_max`` blocks as extra lanes of the same permute
+(one latency, unique non-trash scatter slots, per-lane accumulate /
+transpose flags). Flat-tree roots and the xfer phases send many blocks
+between the same pair, so the global round count drops well below the
+level-serial path's — same bytes, fewer rounds
+(:func:`overlapped_byte_counts` == ``simulator.volumes``, tested).
+
+The level-barrier executor (:func:`compile_exec` + ``make_sweep``)
+remains fully supported for A/B comparison — ``run_distributed(...,
+overlap=False)`` and ``benchmarks/pselinv_bench.py`` drive it.
 """
 from __future__ import annotations
 
@@ -49,6 +75,8 @@ __all__ = [
     "PlanOp", "CommPlan", "build_plan", "tree_for", "merge_round_lists",
     "pack_edges", "CommRound", "LocalRound", "LevelExec", "ExecPlan",
     "compile_exec", "exec_byte_counts", "etree_levels",
+    "GlobalRound", "ComputeOp", "OverlapLevel", "OverlappedExec",
+    "schedule_overlapped", "overlapped_byte_counts", "ppermute_round_count",
 ]
 
 
@@ -391,6 +419,36 @@ class ExecPlan:
         return self.nb // self.pc
 
 
+def _level_tables(plan: CommPlan, Ks: Sequence[int]):
+    """The per-level dense mask/index tables both executor lowerings
+    share (one derivation — `compile_exec` and `_overlap_items` must
+    never drift): cmask, col_write_row, col_write_col, diag_rowmask,
+    kcs, krs, diag_root, diag_slot."""
+    grid, nb = plan.grid, plan.nb
+    pr, pc = grid.pr, grid.pc
+    nbr, nbc = nb // pr, nb // pc
+    nk = len(Ks)
+    cmask = np.zeros((pc, nk, nbc))
+    cw_row = np.zeros((pr, nk, nbr))
+    cw_col = np.zeros((pc, nk))
+    d_rowmask = np.zeros((pr, nk))
+    for k, K in enumerate(Ks):
+        for I in plan.bs.struct[K]:
+            I = int(I)
+            cmask[I % pc, k, I // pc] = 1.0
+            cw_row[I % pr, k, I // pr] = 1.0
+        cw_col[K % pc, k] = 1.0
+        d_rowmask[K % pr, k] = 1.0
+    return dict(
+        cmask=cmask, col_write_row=cw_row, col_write_col=cw_col,
+        diag_rowmask=d_rowmask,
+        kcs=np.array([K // pc for K in Ks], np.int32),
+        krs=np.array([K // pr for K in Ks], np.int32),
+        diag_root=np.array([grid.owner(K, K) for K in Ks], np.int32),
+        diag_slot=np.array([(K // pr) * nbc + K // pc for K in Ks],
+                           np.int32))
+
+
 def compile_exec(plan: CommPlan) -> ExecPlan:
     """Compile the IR into the level-pipelined executable form: every
     collective of a level shares rounds with its independent siblings."""
@@ -418,17 +476,12 @@ def compile_exec(plan: CommPlan) -> ExecPlan:
         xo_local: List[Tuple[int, int, int]] = []
         xo_edges: List[Edge] = []
         dred_ops: List[List[List[Edge]]] = []
-        cmask = np.zeros((pc, nk, nbc))
-        cw_row = np.zeros((pr, nk, nbr))
-        cw_col = np.zeros((pc, nk))
-        d_rowmask = np.zeros((pr, nk))
+        tabs = _level_tables(plan, Ks)
 
         for K in Ks:
             k = k_of[K]
             C = [int(i) for i in bs.struct[K]]
             for I in C:
-                cmask[I % pc, k, I // pc] = 1.0
-                cw_row[I % pr, k, I // pr] = 1.0
                 # owner-local transfers are layout copies, not comm ops
                 if grid.owner(I, K) == grid.owner(K, I):
                     xi_local.append((grid.owner(I, K),
@@ -437,8 +490,6 @@ def compile_exec(plan: CommPlan) -> ExecPlan:
                     xo_local.append((grid.owner(I, K),
                                      (I // pr) * nbc + K // pc,
                                      (K // pr) * nbc + I // pc))
-            cw_col[K % pc, k] = 1.0
-            d_rowmask[K % pr, k] = 1.0
 
             for op in by_sn.get(K, ()):
                 if op.kind == "xfer":
@@ -487,31 +538,149 @@ def compile_exec(plan: CommPlan) -> ExecPlan:
             xfer_in=[_round_tables(r, P, t_uh)
                      for r in pack_edges(xi_edges)],
             bcast=_schedule_tree_edges(bcast_ops, "left", P, t_uh),
-            cmask=cmask,
+            cmask=tabs["cmask"],
             reduce=_schedule_tree_edges(red_ops, "right", P, t_pf),
-            kcs=np.array([K // pc for K in Ks], dtype=np.int32),
-            col_write_row=cw_row, col_write_col=cw_col,
+            kcs=tabs["kcs"],
+            col_write_row=tabs["col_write_row"],
+            col_write_col=tabs["col_write_col"],
             xfer_out_local=_local_rounds(xo_local, P, t_ai),
             xfer_out=[_round_tables(r, P, t_ai)
                       for r in pack_edges(xo_edges)],
-            krs=np.array([K // pr for K in Ks], dtype=np.int32),
-            diag_rowmask=d_rowmask,
+            krs=tabs["krs"],
+            diag_rowmask=tabs["diag_rowmask"],
             diag_reduce=_schedule_tree_edges(dred_ops, "right", P, nk),
-            diag_root=np.array([grid.owner(K, K) for K in Ks],
-                               dtype=np.int32),
-            diag_slot=np.array([(K // pr) * nbc + K // pc for K in Ks],
-                               dtype=np.int32)))
+            diag_root=tabs["diag_root"],
+            diag_slot=tabs["diag_slot"]))
 
     return ExecPlan(nb=nb, pr=pr, pc=pc, diag_set_root=droot,
                     diag_set_slot=dslot, levels=levels)
 
 
-def exec_byte_counts(ex: ExecPlan
+# ---------------------------------------------------------------------------
+# overlapped cross-level lowering: one global round stream + coalescing
+# ---------------------------------------------------------------------------
+
+#: phase ordering inside the packing priority (lower fires first when
+#: competing for the same ppermute slot)
+_PH_XI, _PH_BC, _PH_RED, _PH_XO, _PH_DRED = range(5)
+
+
+@dataclass
+class _Item:
+    """One schedulable unit of the overlapped sweep: a comm edge, an
+    owner-local copy, or a compute op. ``deps`` are item indices that must
+    fire strictly earlier (edges/locals: an earlier round; compute: the
+    same or an earlier round boundary)."""
+    prio: Tuple[int, int, int]
+    deps: List[int] = field(default_factory=list)
+    src: int = -1
+    dst: int = -1
+    gslot: int = 0
+    dslot: int = 0
+    add: bool = False
+    transpose: bool = False
+    kind: str = ""                 # op kind for byte accounting
+    level: int = -1
+    nbytes: float = 0.0
+    local: bool = False
+    compute: str = ""              # "gemm" | "write" | "scomp" | "diagw"
+
+
+@dataclass
+class GlobalRound:
+    """One ppermute of the global overlapped stream. The payload is a
+    stack of ``width`` (b, b) blocks: a (src, dst) pair that carries
+    several coalesced blocks uses several lanes of the same permute;
+    devices with fewer blocks pad (gather lane 0, scatter to trash).
+
+    Per-device tables (all (P, width)): ``gather``/``scatter`` flat arena
+    slots, ``addm`` 1.0 where the lane accumulates (reductions) instead of
+    overwriting, ``tmask`` True where the receiver transposes the lane
+    (the L̂→Û and A⁻¹ symmetric handoffs). ``lgather``/``lscatter``/
+    ``ltmask`` ((P, lwidth)) are owner-local copies executed before the
+    permute. ``edges`` keeps (src, dst, kind, level, nbytes) per lane for
+    byte accounting and the dependence-property tests."""
+    perm: List[Tuple[int, int]]
+    width: int
+    gather: np.ndarray
+    scatter: np.ndarray
+    addm: np.ndarray
+    tmask: np.ndarray
+    edges: List[Tuple[int, int, str, int, float]]
+    lwidth: int = 0
+    lgather: np.ndarray | None = None
+    lscatter: np.ndarray | None = None
+    ltmask: np.ndarray | None = None
+    lmoves: List[Tuple[int, str, int]] = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class ComputeOp:
+    """A compute step fired at a round boundary (before that round's
+    comm): the level's masked GEMM, the A⁻¹(C,K) column write, the
+    diagonal partial-sum S, or the diagonal write."""
+    kind: str                      # "gemm" | "write" | "scomp" | "diagw"
+    level: int                     # index into OverlappedExec.levels
+
+
+@dataclass
+class OverlapLevel:
+    """Per-level compute metadata of the overlapped stream (the masks of
+    :class:`LevelExec`) plus the level's arena block offsets."""
+    Ks: np.ndarray
+    base_u: int                    # Û stack offset (nk*nbc blocks)
+    base_p: int                    # partial stack offset (nk*nbr blocks)
+    base_s: int                    # diagonal S stack offset (nk blocks)
+    cmask: np.ndarray              # (pc, nk, nbc)
+    kcs: np.ndarray
+    col_write_row: np.ndarray
+    col_write_col: np.ndarray
+    krs: np.ndarray
+    diag_rowmask: np.ndarray
+    diag_root: np.ndarray
+    diag_slot: np.ndarray
+
+
+@dataclass
+class OverlappedExec:
+    """The overlapped compilation: a single global sequence of coalesced
+    ppermute rounds spanning every elimination-tree level, plus the
+    compute ops pinned to round boundaries (``compute_at[t]`` runs before
+    round ``t``; the final entry after the last round). The arena is one
+    flat per-device block buffer: [0, n_ainv) A⁻¹, [lh_base, lh_base +
+    n_ainv) the read-only L̂ shard, then each level's Û / partial / S
+    stacks, with the shared trash block last."""
+    nb: int
+    pr: int
+    pc: int
+    n_ainv: int
+    lh_base: int
+    arena_blocks: int              # trash included
+    trash: int
+    diag_set_root: np.ndarray
+    diag_set_slot: np.ndarray
+    levels: List[OverlapLevel]
+    rounds: List[GlobalRound]
+    compute_at: List[List[ComputeOp]]   # len == len(rounds) + 1
+
+    @property
+    def nbr(self) -> int:
+        return self.nb // self.pr
+
+    @property
+    def nbc(self) -> int:
+        return self.nb // self.pc
+
+
+def exec_byte_counts(ex: "ExecPlan | OverlappedExec"
                      ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
     """Per-rank outgoing/incoming bytes by phase kind, summed over the
     *compiled* rounds — the bytes the device program actually moves. The
     equivalence test checks these against ``simulator.volumes`` (same
-    plan, independent accounting path)."""
+    plan, independent accounting path). Accepts both the level-serial
+    :class:`ExecPlan` and the cross-level :class:`OverlappedExec`."""
+    if isinstance(ex, OverlappedExec):
+        return overlapped_byte_counts(ex)
     P = ex.pr * ex.pc
     out: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
     inc: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
@@ -529,3 +698,385 @@ def exec_byte_counts(ex: ExecPlan
         add("xfer-out", lv.xfer_out)
         add("diag-reduce", lv.diag_reduce)
     return dict(out), dict(inc)
+
+
+def overlapped_byte_counts(ov: OverlappedExec
+                           ) -> Tuple[Dict[str, np.ndarray],
+                                      Dict[str, np.ndarray]]:
+    """Per-rank outgoing/incoming bytes by op kind over the overlapped
+    global rounds. Coalescing moves the same bytes in fewer rounds, so
+    these must equal :func:`exec_byte_counts` of the level-serial path
+    and ``simulator.volumes`` (tested)."""
+    P = ov.pr * ov.pc
+    out: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+    inc: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+    for rnd in ov.rounds:
+        for (s, d, kind, _lv, nb_) in rnd.edges:
+            out[kind][s] += nb_
+            inc[kind][d] += nb_
+    return dict(out), dict(inc)
+
+
+def ppermute_round_count(ex: "ExecPlan | OverlappedExec") -> int:
+    """Number of ``lax.ppermute`` rounds a compiled sweep issues (local
+    copy rounds are free and not counted)."""
+    if isinstance(ex, OverlappedExec):
+        return sum(1 for r in ex.rounds if r.perm)
+    return sum(len(lv.xfer_in) + len(lv.bcast) + len(lv.reduce)
+               + len(lv.xfer_out) + len(lv.diag_reduce)
+               for lv in ex.levels)
+
+
+def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
+                                            int, int, int]:
+    """Lower the CommPlan into the overlapped item DAG.
+
+    Returns (items, level metadata, n_ainv, lh_base, arena_blocks).
+    Dependence model (RAW/WAR hazards on the arena are encoded as deps;
+    every arena slot has exactly one writer item, reductions accumulate
+    through dep-ordered adds):
+
+      xfer-in(L)           — none (reads the static L̂ shard)
+      col-bcast(L) edge    — its in-tree parent edge; tree-root edges the
+                             xfer-in item that filled the root's Û slot
+      gemm(L)              — all xfer-in/col-bcast of L, plus every A⁻¹
+                             write of level L-1 (write/xfer-out/diagw;
+                             transitively all shallower levels)
+      row-reduce(L) edge   — in-tree children edges + gemm(L)
+      write(L)             — gemm(L) + all row-reduce(L)
+      xfer-out(L)          — write(L)
+      scomp(L)             — write(L) + all xfer-out(L)
+      diag-reduce(L) edge  — in-tree children edges + scomp(L)
+      diagw(L)             — scomp(L) + all diag-reduce(L)
+
+    Only the gemm→…→diagw chain serializes across levels; every
+    xfer-in/col-bcast round of level L+1 is free to interleave with
+    level L's GEMM-side rounds — the paper's §3 asynchronous pipelining
+    across elimination-tree levels."""
+    grid, nb = plan.grid, plan.nb
+    pr, pc = grid.pr, grid.pc
+    if nb % pr or nb % pc:
+        raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
+    nbr, nbc = nb // pr, nb // pc
+    bs = plan.bs
+    by_sn = plan.ops_by_supernode()
+    N = nbr * nbc
+    lh_base = N
+    off = 2 * N
+
+    items: List[_Item] = []
+    levels: List[OverlapLevel] = []
+    prev_writers: List[int] = []       # A⁻¹-writing items of level L-1
+
+    for L, Ks in enumerate(plan.sweep_levels):
+        nk = len(Ks)
+        k_of = {K: k for k, K in enumerate(Ks)}
+        base_u, base_p, base_s = off, off + nk * nbc, off + nk * (nbc + nbr)
+        off = base_s + nk
+
+        tabs = _level_tables(plan, Ks)
+
+        # (device, Û arena slot) -> the xfer-in item that fills it. The
+        # device is part of the key: I and I+1 with I//pc == (I+1)//pc
+        # share the flat slot number on *different* grid columns, so a
+        # slot-only key would wire a broadcast's root to the wrong fill
+        u_filler: Dict[Tuple[int, int], int] = {}
+        xi_bc_ids: List[int] = []
+        red_ids: List[int] = []
+        xo_ids: List[int] = []
+        dred_ids: List[int] = []
+
+        def _add(it: _Item) -> int:
+            items.append(it)
+            return len(items) - 1
+
+        for K in Ks:
+            k = k_of[K]
+            C = [int(i) for i in bs.struct[K]]
+            for I in C:
+                if grid.owner(I, K) == grid.owner(K, I):
+                    slot = base_u + k * nbc + I // pc
+                    u_filler[(grid.owner(K, I), slot)] = _add(_Item(
+                        prio=(L, _PH_XI, len(items)), local=True,
+                        src=grid.owner(I, K), dst=grid.owner(I, K),
+                        gslot=lh_base + (I // pr) * nbc + K // pc,
+                        dslot=slot, transpose=True, kind="xfer-local",
+                        level=L))
+
+        xi_bc_ids.extend(u_filler.values())     # the owner-local fills
+        for K in Ks:
+            k = k_of[K]
+            for op in by_sn.get(K, ()):
+                if op.kind == "xfer":
+                    I = op.block
+                    dst = [r for r in op.participants if r != op.root][0]
+                    slot = base_u + k * nbc + I // pc
+                    u_filler[(dst, slot)] = i = _add(_Item(
+                        prio=(L, _PH_XI, len(items)),
+                        src=op.root, dst=dst,
+                        gslot=lh_base + (I // pr) * nbc + K // pc,
+                        dslot=slot, transpose=True, kind="xfer",
+                        level=L, nbytes=op.nbytes))
+                    xi_bc_ids.append(i)
+                elif op.kind == "col-bcast":
+                    I = op.block
+                    slot = base_u + k * nbc + I // pc
+                    flat = [e for rnd in op.tree.bcast_rounds() for e in rnd]
+                    delivered: Dict[int, int] = {}
+                    for (s, d) in flat:
+                        if s in delivered:
+                            deps = [delivered[s]]
+                        elif (s, slot) in u_filler:
+                            deps = [u_filler[(s, slot)]]
+                        else:
+                            deps = []
+                        delivered[d] = _add(_Item(
+                            prio=(L, _PH_BC, len(items)), deps=deps,
+                            src=s, dst=d, gslot=slot, dslot=slot,
+                            kind="col-bcast", level=L, nbytes=op.nbytes))
+                        xi_bc_ids.append(delivered[d])
+                elif op.kind in ("row-reduce", "diag-reduce",
+                                 "xfer-out", "diag-bcast"):
+                    pass      # lowered below / host-absorbed (diag-bcast)
+                else:
+                    raise ValueError(
+                        f"schedule_overlapped cannot lower {op.kind!r} — "
+                        "teach it the new kind or the executed schedule "
+                        "silently drifts from the simulated one")
+
+        gemm_id = _add(_Item(prio=(L, _PH_BC, len(items)),
+                             deps=xi_bc_ids + prev_writers,
+                             compute="gemm", level=L))
+
+        for K in Ks:
+            k = k_of[K]
+            for op in by_sn.get(K, ()):
+                if op.kind != "row-reduce":
+                    continue
+                J = op.block
+                slot = base_p + k * nbr + J // pr
+                flat = [e for rnd in op.tree.reduce_rounds() for e in rnd]
+                ids = [_add(_Item(prio=(L, _PH_RED, len(items)),
+                                  src=s, dst=d, gslot=slot, dslot=slot,
+                                  add=True, kind="row-reduce", level=L,
+                                  nbytes=op.nbytes))
+                       for (s, d) in flat]
+                into: Dict[int, List[int]] = defaultdict(list)
+                for i, (s, d) in zip(ids, flat):
+                    into[d].append(i)
+                for i, (s, d) in zip(ids, flat):
+                    items[i].deps = into.get(s, []) + [gemm_id]
+                red_ids.extend(ids)
+
+        write_id = _add(_Item(prio=(L, _PH_RED, len(items)),
+                              deps=[gemm_id] + red_ids,
+                              compute="write", level=L))
+
+        for K in Ks:
+            k = k_of[K]
+            C = [int(i) for i in bs.struct[K]]
+            for I in C:
+                if grid.owner(I, K) == grid.owner(K, I):
+                    xo_ids.append(_add(_Item(
+                        prio=(L, _PH_XO, len(items)), deps=[write_id],
+                        local=True, src=grid.owner(I, K),
+                        dst=grid.owner(I, K),
+                        gslot=(I // pr) * nbc + K // pc,
+                        dslot=(K // pr) * nbc + I // pc,
+                        transpose=True, kind="xfer-out-local", level=L)))
+            for op in by_sn.get(K, ()):
+                if op.kind != "xfer-out":
+                    continue
+                J = op.block
+                dst = [r for r in op.participants if r != op.root][0]
+                xo_ids.append(_add(_Item(
+                    prio=(L, _PH_XO, len(items)), deps=[write_id],
+                    src=op.root, dst=dst,
+                    gslot=(J // pr) * nbc + K // pc,
+                    dslot=(K // pr) * nbc + J // pc,
+                    transpose=True, kind="xfer-out", level=L,
+                    nbytes=op.nbytes)))
+
+        scomp_id = _add(_Item(prio=(L, _PH_XO, len(items)),
+                              deps=[write_id] + xo_ids,
+                              compute="scomp", level=L))
+
+        for K in Ks:
+            k = k_of[K]
+            for op in by_sn.get(K, ()):
+                if op.kind != "diag-reduce":
+                    continue
+                slot = base_s + k
+                flat = [e for rnd in op.tree.reduce_rounds() for e in rnd]
+                ids = [_add(_Item(prio=(L, _PH_DRED, len(items)),
+                                  src=s, dst=d, gslot=slot, dslot=slot,
+                                  add=True, kind="diag-reduce", level=L,
+                                  nbytes=op.nbytes))
+                       for (s, d) in flat]
+                into = defaultdict(list)
+                for i, (s, d) in zip(ids, flat):
+                    into[d].append(i)
+                for i, (s, d) in zip(ids, flat):
+                    items[i].deps = into.get(s, []) + [scomp_id]
+                dred_ids.extend(ids)
+
+        diagw_id = _add(_Item(prio=(L, _PH_DRED, len(items)),
+                              deps=[scomp_id] + dred_ids,
+                              compute="diagw", level=L))
+
+        prev_writers = [write_id, diagw_id] + xo_ids
+        levels.append(OverlapLevel(
+            Ks=np.asarray(Ks, dtype=np.int64),
+            base_u=base_u, base_p=base_p, base_s=base_s, **tabs))
+
+    return items, levels, N, lh_base, off + 1
+
+
+def schedule_overlapped(plan: CommPlan,
+                        coalesce_max: int = 8) -> OverlappedExec:
+    """Compile the IR into the cross-level overlapped executable form.
+
+    List-schedules the item DAG of :func:`_overlap_items` into one global
+    round sequence: an edge fires as soon as its dependences have fired
+    in earlier rounds and a ppermute slot is free; compute ops fire at
+    the earliest round boundary their inputs allow. Level L+1's xfer-in
+    and col-bcast traffic therefore interleaves with level L's reduce /
+    xfer-out / diagonal rounds instead of barriering on them.
+
+    Coalescing: within one round a (src, dst) device pair may carry up to
+    ``coalesce_max`` blocks as extra payload lanes of the same permute
+    (flat trees and the xfer phases send many blocks between the same
+    pair), so the global round count drops below the level-serial path's.
+    Ready edges are packed lowest-(level, phase) first, which keeps the
+    critical path as tight as the serial schedule while later levels'
+    traffic fills the idle lanes."""
+    grid = plan.grid
+    P = grid.size
+    items, levels, N, lh_base, arena_blocks = _overlap_items(plan)
+    trash = arena_blocks - 1
+
+    droot = np.array([grid.owner(K, K) for K in plan.diag_only], np.int32)
+    dslot = np.array([(K // grid.pr) * (plan.nb // grid.pc) + K // grid.pc
+                      for K in plan.diag_only], np.int32)
+
+    n = len(items)
+    fired = [None] * n             # edges/locals: round; compute: boundary
+    remaining = set(range(n))
+    compute_order = [i for i in range(n) if items[i].compute]
+    rounds: List[GlobalRound] = []
+    compute_at: List[List[ComputeOp]] = [[]]
+
+    def _deps_met(i: int, t: int) -> bool:
+        for d in items[i].deps:
+            if fired[d] is None:
+                return False
+            if not items[d].compute and fired[d] >= t:
+                return False       # same-round edge: not yet visible
+        return True
+
+    t = 0
+    while remaining:
+        # fire every runnable compute op at boundary t (fixpoint: chained
+        # ops like write→scomp may become runnable within one boundary)
+        progress = True
+        while progress:
+            progress = False
+            for i in compute_order:
+                if i in remaining and _deps_met(i, t):
+                    fired[i] = t
+                    remaining.discard(i)
+                    compute_at[t].append(
+                        ComputeOp(items[i].compute, items[i].level))
+                    progress = True
+        if not remaining:
+            break
+
+        ready = sorted((i for i in remaining
+                        if not items[i].compute and _deps_met(i, t)),
+                       key=lambda i: items[i].prio)
+        pair_lanes: Dict[Tuple[int, int], List[int]] = {}
+        used_src: set = set()
+        used_dst: set = set()
+        local_lanes: Dict[int, List[int]] = defaultdict(list)
+        for i in ready:
+            it = items[i]
+            if it.local:
+                if len(local_lanes[it.src]) < coalesce_max:
+                    local_lanes[it.src].append(i)
+                continue
+            key = (it.src, it.dst)
+            if key in pair_lanes:
+                if len(pair_lanes[key]) < coalesce_max:
+                    pair_lanes[key].append(i)
+            elif it.src not in used_src and it.dst not in used_dst:
+                pair_lanes[key] = [i]
+                used_src.add(it.src)
+                used_dst.add(it.dst)
+        if not pair_lanes and not local_lanes:
+            raise ValueError(
+                f"overlapped scheduler stalled at round {t} with "
+                f"{len(remaining)} items left — cyclic dependences")
+
+        width = max((len(v) for v in pair_lanes.values()), default=0)
+        gather = np.zeros((P, max(width, 1)), np.int32)
+        scatter = np.full((P, max(width, 1)), trash, np.int32)
+        addm = np.zeros((P, max(width, 1)), np.float32)
+        tmask = np.zeros((P, max(width, 1)), bool)
+        edges: List[Tuple[int, int, str, int, float]] = []
+        perm = []
+        for (s, d), lane_ids in pair_lanes.items():
+            perm.append((s, d))
+            for j, i in enumerate(lane_ids):
+                it = items[i]
+                gather[s, j] = it.gslot
+                scatter[d, j] = it.dslot
+                addm[d, j] = 1.0 if it.add else 0.0
+                tmask[d, j] = it.transpose
+                edges.append((s, d, it.kind, it.level, it.nbytes))
+                fired[i] = t
+                remaining.discard(i)
+
+        lwidth = max((len(v) for v in local_lanes.values()), default=0)
+        lg = ls = lt = None
+        lmoves: List[Tuple[int, str, int]] = []
+        if lwidth:
+            lg = np.zeros((P, lwidth), np.int32)
+            ls = np.full((P, lwidth), trash, np.int32)
+            lt = np.zeros((P, lwidth), bool)
+            for dev, lane_ids in local_lanes.items():
+                for j, i in enumerate(lane_ids):
+                    it = items[i]
+                    lg[dev, j] = it.gslot
+                    ls[dev, j] = it.dslot
+                    lt[dev, j] = it.transpose
+                    lmoves.append((dev, it.kind, it.level))
+                    fired[i] = t
+                    remaining.discard(i)
+
+        # every non-trash write this round is unique per device (one
+        # writer per arena slot; reductions accumulate across rounds)
+        for dev in range(P):
+            w = [x for x in scatter[dev] if x != trash]
+            if lwidth:
+                w += [x for x in ls[dev] if x != trash]
+            if len(set(w)) != len(w):
+                raise ValueError(
+                    f"overlapped round {t}: device {dev} scatters twice "
+                    f"into the same arena slot ({sorted(w)}) — the "
+                    "one-writer-per-(device, slot) invariant is broken")
+
+        rounds.append(GlobalRound(
+            perm=perm, width=width,
+            gather=gather[:, :max(width, 1)],
+            scatter=scatter[:, :max(width, 1)],
+            addm=addm[:, :max(width, 1)], tmask=tmask[:, :max(width, 1)],
+            edges=edges, lwidth=lwidth, lgather=lg, lscatter=ls,
+            ltmask=lt, lmoves=lmoves))
+        compute_at.append([])
+        t += 1
+
+    return OverlappedExec(
+        nb=plan.nb, pr=grid.pr, pc=grid.pc, n_ainv=N, lh_base=lh_base,
+        arena_blocks=arena_blocks, trash=trash,
+        diag_set_root=droot, diag_set_slot=dslot,
+        levels=levels, rounds=rounds, compute_at=compute_at)

@@ -47,17 +47,18 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..compat import shard_map
-from ..kernels.ops import pselinv_level_gemm
-from .plan import (CommPlan, CommRound, ExecPlan, LocalRound, build_plan,
-                   compile_exec, merge_round_lists)
+from ..kernels.ops import pselinv_level_gemm, pselinv_round_gemm
+from .plan import (CommPlan, CommRound, ExecPlan, LocalRound,
+                   OverlappedExec, build_plan, compile_exec,
+                   merge_round_lists, schedule_overlapped)
 from .symbolic import BlockStructure, symbolic_factorize
 from .supernodal_lu import factorize
 from .selinv import normalize_factors
 from .trees import CommTree, TreeKind, build_tree, stable_hash
 
 __all__ = ["PSelInvProgram", "build_program", "build_program_unrolled",
-           "make_sweep", "make_sweep_unrolled", "prepare_inputs",
-           "run_distributed", "gather_blocks"]
+           "make_sweep", "make_sweep_overlapped", "make_sweep_unrolled",
+           "prepare_inputs", "run_distributed", "gather_blocks"]
 
 
 @dataclass
@@ -72,6 +73,7 @@ class PSelInvProgram:
     bs: BlockStructure
     plan: Optional[CommPlan] = None
     exec_plan: Optional[ExecPlan] = None
+    overlap_plan: Optional[OverlappedExec] = None
     iters: Optional[list] = None        # legacy unrolled schedule
 
     @property
@@ -88,13 +90,26 @@ class PSelInvProgram:
 # ---------------------------------------------------------------------------
 
 def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
-                  kind: TreeKind = TreeKind.SHIFTED) -> PSelInvProgram:
-    """Build the CommPlan IR and compile it to executable tables."""
+                  kind: TreeKind = TreeKind.SHIFTED,
+                  overlap: bool = False,
+                  coalesce_max: int = 8) -> PSelInvProgram:
+    """Build the CommPlan IR and compile it to executable tables.
+
+    ``overlap=True`` compiles the cross-level overlapped round stream
+    (`plan.schedule_overlapped`) consumed by
+    :func:`make_sweep_overlapped`; ``overlap=False`` the level-serial
+    :class:`ExecPlan` for :func:`make_sweep` (the A/B baseline). Only
+    the requested lowering is compiled — an A/B caller builds one
+    program per executor (as ``benchmarks/pselinv_bench.py`` does), or
+    runs ``plan.compile_exec(prog.plan)`` on the shared CommPlan."""
     assert nb % pr == 0 and nb % pc == 0
     from .schedule import Grid2D
     plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
-    return PSelInvProgram(nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs,
-                          plan=plan, exec_plan=compile_exec(plan))
+    return PSelInvProgram(
+        nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
+        exec_plan=None if overlap else compile_exec(plan),
+        overlap_plan=(schedule_overlapped(plan, coalesce_max=coalesce_max)
+                      if overlap else None))
 
 
 def _dyn(buf, i):
@@ -248,6 +263,139 @@ def make_sweep(prog: PSelInvProgram):
                 mode="promise_in_bounds")
 
         return Ainv_f[:-1].reshape(nbr, nbc, b, b)[None]  # drop trash blk
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# overlapped path: one global cross-level round stream over a block arena
+# ---------------------------------------------------------------------------
+
+def make_sweep_overlapped(prog: PSelInvProgram):
+    """Build the cross-level overlapped SPMD sweep from the compiled
+    global round stream (`plan.schedule_overlapped`).
+
+    One flat per-device **arena** of (b, b) blocks holds A⁻¹, the
+    read-only L̂ shard, and every level's Û / partial / S stacks; the
+    sweep is a single sequence of coalesced multi-lane ppermute rounds
+    with per-lane gather/scatter/accumulate/transpose tables, and the
+    masked level GEMMs (plus column/diagonal writes) fire at the round
+    boundaries the dependence scheduler pinned them to — level L+1's
+    xfer-in and col-bcast lanes ride the same rounds as level L's
+    reduce / xfer-out / diag traffic instead of waiting for a level
+    barrier. Call under shard_map exactly like :func:`make_sweep`."""
+    ov = prog.overlap_plan
+    assert ov is not None, "build_program(..., overlap=True) first"
+    b, pr, pc = prog.b, prog.pr, prog.pc
+    nbr, nbc = ov.nbr, ov.nbc
+    N = ov.n_ainv
+
+    def gi(buf, i):      # gather rows, bounds statically guaranteed
+        return buf.at[i].get(mode="promise_in_bounds")
+
+    def sweep(Lh, Dinv):
+        Lh = Lh[0]        # drop the size-1 sharded device axis
+        Dinv = Dinv[0]
+        idx = lax.axis_index("xy")
+        r = idx // pc
+        c = idx % pc
+        dtype = Lh.dtype
+        arena = jnp.zeros((ov.arena_blocks, b, b), dtype=dtype)
+        arena = lax.dynamic_update_slice(
+            arena, Lh.reshape(N, b, b), (ov.lh_base, 0, 0))
+        Dinv_f = Dinv.reshape(N, b, b)
+
+        # structless supernodes (leaves without fill + grid padding)
+        if len(ov.diag_set_root):
+            slots = jnp.asarray(ov.diag_set_slot)
+            m = (jnp.asarray(ov.diag_set_root) == idx).astype(dtype)
+            arena = arena.at[slots].add(
+                m[:, None, None] * gi(Dinv_f, slots),
+                mode="promise_in_bounds")
+
+        def apply_compute(op, arena):
+            lv = ov.levels[op.level]
+            nk = len(lv.Ks)
+            cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
+            if op.kind == "gemm":
+                U = lax.slice_in_dim(arena, lv.base_u, lv.base_u + nk * nbc
+                                     ).reshape(nk, nbc, b, b)
+                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+                partial = pselinv_round_gemm(Ainv, U, cm)
+                return lax.dynamic_update_slice(
+                    arena, partial.reshape(nk * nbr, b, b),
+                    (lv.base_p, 0, 0))
+            if op.kind == "write":
+                partial = lax.slice_in_dim(
+                    arena, lv.base_p, lv.base_p + nk * nbr
+                    ).reshape(nk, nbr, b, b)
+                kcs = jnp.asarray(lv.kcs)
+                wr = jnp.take(jnp.asarray(lv.col_write_row, dtype=dtype),
+                              r, axis=0)                    # (nk, nbr)
+                wc = jnp.take(jnp.asarray(lv.col_write_col, dtype=dtype),
+                              c, axis=0)                    # (nk,)
+                w = jnp.transpose(wr * wc[:, None])         # (nbr, nk)
+                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+                old = Ainv.at[:, kcs].get(mode="promise_in_bounds")
+                new = -jnp.swapaxes(partial, 0, 1)          # (nbr, nk, b, b)
+                # masked delta + scatter-add: same-level K's write disjoint
+                # (device, slot) pairs, so duplicate kcs entries add zeros
+                Ainv = Ainv.at[:, kcs].add(
+                    w[:, :, None, None] * (new - old),
+                    mode="promise_in_bounds")
+                return lax.dynamic_update_slice(
+                    arena, Ainv.reshape(N, b, b), (0, 0, 0))
+            if op.kind == "scomp":
+                U = lax.slice_in_dim(arena, lv.base_u, lv.base_u + nk * nbc
+                                     ).reshape(nk, nbc, b, b)
+                Uh_m = U * cm[:, :, None, None]
+                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+                Arow = gi(Ainv, jnp.asarray(lv.krs))
+                S = jnp.einsum("kjab,kjcb->kac",
+                               Arow * cm[:, :, None, None], Uh_m)
+                rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype),
+                              r, axis=0)                    # (nk,)
+                return lax.dynamic_update_slice(
+                    arena, S * rm[:, None, None], (lv.base_s, 0, 0))
+            # "diagw":  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
+            S = lax.slice_in_dim(arena, lv.base_s, lv.base_s + nk)
+            slots = jnp.asarray(lv.diag_slot)
+            m = (jnp.asarray(lv.diag_root) == idx).astype(dtype)
+            newd = gi(Dinv_f, slots) - jnp.swapaxes(S, -1, -2)
+            return arena.at[slots].add(
+                m[:, None, None] * (newd - gi(arena, slots)),
+                mode="promise_in_bounds")
+
+        for t, rnd in enumerate(ov.rounds):
+            for op in ov.compute_at[t]:
+                arena = apply_compute(op, arena)
+            if rnd.lwidth:
+                lg = jnp.take(jnp.asarray(rnd.lgather), idx, axis=0)
+                ls = jnp.take(jnp.asarray(rnd.lscatter), idx, axis=0)
+                lt = jnp.take(jnp.asarray(rnd.ltmask), idx, axis=0)
+                blks = gi(arena, lg)                        # (LW, b, b)
+                blks = jnp.where(lt[:, None, None],
+                                 jnp.swapaxes(blks, -1, -2), blks)
+                # non-participating lanes land in the trash block
+                arena = arena.at[ls].set(blks, mode="promise_in_bounds")
+            if rnd.perm:
+                g = jnp.take(jnp.asarray(rnd.gather), idx, axis=0)
+                s_ = jnp.take(jnp.asarray(rnd.scatter), idx, axis=0)
+                am = jnp.take(jnp.asarray(rnd.addm, dtype=dtype), idx,
+                              axis=0)
+                tm = jnp.take(jnp.asarray(rnd.tmask), idx, axis=0)
+                payload = gi(arena, g)                      # (W, b, b)
+                moved = lax.ppermute(payload, "xy", rnd.perm)
+                moved = jnp.where(tm[:, None, None],
+                                  jnp.swapaxes(moved, -1, -2), moved)
+                cur = gi(arena, s_)
+                arena = arena.at[s_].set(
+                    moved + am[:, None, None] * cur,
+                    mode="promise_in_bounds")
+        for op in ov.compute_at[len(ov.rounds)]:
+            arena = apply_compute(op, arena)
+
+        return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)[None]
 
     return sweep
 
@@ -538,16 +686,18 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
 
 def run_distributed(A, b: int, pr: int, pc: int,
                     kind: TreeKind = TreeKind.SHIFTED, dtype=jnp.float32,
-                    pipelined: bool = True):
+                    pipelined: bool = True, overlap: bool = True):
     """End-to-end distributed selected inversion on pr*pc devices.
-    ``pipelined=True`` runs the IR executor; ``False`` the legacy
+    ``pipelined=True`` runs the IR executor — by default the cross-level
+    *overlapped* round stream; ``overlap=False`` selects the level-serial
+    executor (the A/B baseline). ``pipelined=False`` runs the legacy
     unrolled sweep (same numerics, larger HLO)."""
     from jax.sharding import Mesh, PartitionSpec as P
 
     bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
     if pipelined:
-        prog = build_program(bs, nb, b, pr, pc, kind=kind)
-        sweep = make_sweep(prog)
+        prog = build_program(bs, nb, b, pr, pc, kind=kind, overlap=overlap)
+        sweep = make_sweep_overlapped(prog) if overlap else make_sweep(prog)
     else:
         prog = build_program_unrolled(bs, nb, b, pr, pc, kind=kind)
         sweep = make_sweep_unrolled(prog)

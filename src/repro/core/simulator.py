@@ -29,13 +29,15 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .plan import CommPlan, PlanOp, build_plan
+from .plan import (CommPlan, ExecPlan, OverlappedExec, PlanOp, build_plan)
 from .schedule import BYTES_PER_ELT, ComputeTask, Grid2D
 from .symbolic import BlockStructure
-from .trees import TreeKind, cached_tree
+from .trees import HYBRID_FLAT_MAX, TreeKind, cached_tree
 
 __all__ = ["NetworkModel", "SimResult", "volumes", "volumes_from_plan",
-           "volume_stats", "simulate"]
+           "volume_stats", "simulate", "RoundSchedule",
+           "round_schedule_from_exec", "round_schedule_from_overlap",
+           "simulate_schedule"]
 
 
 @dataclass(frozen=True)
@@ -105,12 +107,18 @@ def volumes(bs: BlockStructure, grid: Grid2D, kind: TreeKind
 def _msgs_vector(kind: TreeKind, root: int, receivers: Tuple[int, ...],
                  shift: int, n: int) -> np.ndarray:
     """messages-sent-per-rank vector for one tree, ranks in [0, n)."""
+    if kind is TreeKind.HYBRID:
+        # resolve to the concrete kind ``build_tree`` would pick at this
+        # participant count — building a "hybrid" cached_tree here with
+        # tag=0 would yield a shift-0 rotation that disagrees with
+        # ``plan.tree_for``'s tag-derived one above the threshold
+        kind = (TreeKind.FLAT if len(receivers) + 1 <= HYBRID_FLAT_MAX
+                else TreeKind.SHIFTED)
     if kind is TreeKind.SHIFTED:
         from .trees import shifted_binary_tree
         tree = shifted_binary_tree(root, receivers, shift=shift)
     else:
-        tree = cached_tree(kind.value if kind is not TreeKind.HYBRID
-                           else kind.value, root, receivers, 0)
+        tree = cached_tree(kind.value, root, receivers, 0)
     v = np.zeros(n)
     for src, kids in tree.children:
         v[src] = len(kids)
@@ -151,7 +159,7 @@ def volumes_fast(bs: BlockStructure, grid: Grid2D, kind: TreeKind
             cols = (C % pc).astype(np.int64)
             nbytes = w[C] * wk * BYTES_PER_ELT
             if kind is TreeKind.SHIFTED or (
-                    kind is TreeKind.HYBRID and nrecv + 1 > 24):
+                    kind is TreeKind.HYBRID and nrecv + 1 > HYBRID_FLAT_MAX):
                 cache = {}
                 for i, I in enumerate(C):
                     root_rank = krow * pc + int(cols[i])
@@ -164,8 +172,9 @@ def volumes_fast(bs: BlockStructure, grid: Grid2D, kind: TreeKind
                     nz = np.nonzero(m)[0]
                     out_cb[nz * pc + cols[i]] += m[nz] * nbytes[i]
             else:
-                tkind = TreeKind.FLAT if kind is TreeKind.HYBRID else kind
-                m = _msgs_vector(tkind, krow, recv_rows, 0, pr)
+                # HYBRID below threshold resolves inside _msgs_vector —
+                # the one place that mirrors build_tree's rule
+                m = _msgs_vector(kind, krow, recv_rows, 0, pr)
                 nz = np.nonzero(m)[0]
                 for r in nz:
                     np.add.at(out_cb, r * pc + cols, m[r] * nbytes)
@@ -178,7 +187,7 @@ def volumes_fast(bs: BlockStructure, grid: Grid2D, kind: TreeKind
             rows_j = (C % pr).astype(np.int64)
             nbytes = w[C] * wk * BYTES_PER_ELT
             if kind is TreeKind.SHIFTED or (
-                    kind is TreeKind.HYBRID and nrecv + 1 > 24):
+                    kind is TreeKind.HYBRID and nrecv + 1 > HYBRID_FLAT_MAX):
                 cache = {}
                 for j, J in enumerate(C):
                     root_rank = int(rows_j[j]) * pc + kcol
@@ -191,8 +200,7 @@ def volumes_fast(bs: BlockStructure, grid: Grid2D, kind: TreeKind
                     nz = np.nonzero(m)[0]
                     inc_rr[rows_j[j] * pc + nz] += m[nz] * nbytes[j]
             else:
-                tkind = TreeKind.FLAT if kind is TreeKind.HYBRID else kind
-                m = _msgs_vector(tkind, kcol, recv_cols, 0, pc)
+                m = _msgs_vector(kind, kcol, recv_cols, 0, pc)
                 nz = np.nonzero(m)[0]
                 for ccc in nz:
                     np.add.at(inc_rr, rows_j * pc + ccc, m[ccc] * nbytes)
@@ -392,5 +400,119 @@ def simulate(bs: BlockStructure, grid: Grid2D, kind: TreeKind,
                       done.max() if nb else 0.0))
     return SimResult(
         nranks=P, total_time=total,
+        send_bytes=dict(send_bytes), recv_bytes=dict(recv_bytes),
+        compute_time=comp_acc, comm_time=comm_acc)
+
+
+# ---------------------------------------------------------------------------
+# executed-schedule timing: account the *compiled* round stream
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RoundSchedule:
+    """A compiled sweep flattened to its executed timeline: alternating
+    ``("comm", [(src, dst, kind, nbytes), ...])`` ppermute rounds (every
+    transfer of one round ships in the same barriered permute; coalesced
+    lanes of a pair appear as several tuples) and ``("comp", flops)``
+    round boundaries (per-rank flops fired between two rounds). Built
+    from the same :class:`~.plan.ExecPlan` / :class:`~.plan.OverlappedExec`
+    the device program runs, so the time :func:`simulate_schedule` reports
+    is the time of the schedule that *executes* — the overlapped stream
+    is accounted round for round, not approximated per supernode."""
+    nranks: int
+    events: List[Tuple[str, object]]
+
+
+def _level_task_flops(plan: CommPlan, Ks, kind: str) -> np.ndarray:
+    flops = np.zeros(plan.grid.size)
+    sel = set(int(k) for k in Ks)
+    for t in plan.tasks:
+        if t.kind == kind and t.supernode in sel:
+            flops[t.rank] += t.flops
+    return flops
+
+
+def round_schedule_from_exec(ex: ExecPlan, plan: CommPlan) -> RoundSchedule:
+    """Flatten the level-serial executor: each level's phases in order,
+    with the level GEMM at the bcast→reduce boundary and the diagonal
+    update after the diag-reduce (the A/B baseline timeline)."""
+    events: List[Tuple[str, object]] = []
+
+    def comm(rounds, kind):
+        for rnd in rounds:
+            events.append(("comm", [(s, d, kind, nb_)
+                                    for (s, d, _ss, _ds, nb_) in rnd.edges]))
+
+    for lv in ex.levels:
+        comm(lv.xfer_in, "xfer")
+        comm(lv.bcast, "col-bcast")
+        events.append(("comp", _level_task_flops(plan, lv.Ks, "gemm")))
+        comm(lv.reduce, "row-reduce")
+        comm(lv.xfer_out, "xfer-out")
+        comm(lv.diag_reduce, "diag-reduce")
+        events.append(("comp", _level_task_flops(plan, lv.Ks, "diag")))
+    return RoundSchedule(nranks=ex.pr * ex.pc, events=events)
+
+
+def round_schedule_from_overlap(ov: OverlappedExec,
+                                plan: CommPlan) -> RoundSchedule:
+    """Flatten the overlapped executor: the global coalesced round
+    sequence with compute ops at the boundaries the dependence scheduler
+    pinned them to (GEMM flops at ``gemm`` boundaries, diagonal flops at
+    ``diagw``)."""
+    events: List[Tuple[str, object]] = []
+    for t in range(len(ov.rounds) + 1):
+        for op in ov.compute_at[t]:
+            if op.kind in ("gemm", "diagw"):
+                kind = "gemm" if op.kind == "gemm" else "diag"
+                events.append(("comp", _level_task_flops(
+                    plan, ov.levels[op.level].Ks, kind)))
+        if t < len(ov.rounds):
+            rnd = ov.rounds[t]
+            if rnd.perm:
+                events.append(("comm", [(s, d, kind, nb_)
+                                        for (s, d, kind, _lv, nb_)
+                                        in rnd.edges]))
+    return RoundSchedule(nranks=ov.pr * ov.pc, events=events)
+
+
+def simulate_schedule(sched: RoundSchedule,
+                      model: NetworkModel | None = None) -> SimResult:
+    """α-β timing of a compiled round stream under the executed BSP
+    semantics: a ppermute round completes when its slowest pair does
+    (coalesced lanes of one pair share the latency and serialize their
+    bytes), a compute boundary when its busiest rank does. Comparing the
+    level-serial and the overlapped :class:`RoundSchedule` of one plan
+    quantifies the cross-level overlap win under the same network."""
+    model = model or NetworkModel()
+    P = sched.nranks
+    net = _Net(model, P)
+    flop_rate = model.gemm_gflops * 1e9
+
+    T = 0.0
+    comp_acc = np.zeros(P)
+    comm_acc = np.zeros(P)
+    send_bytes: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+    recv_bytes: Dict[str, np.ndarray] = defaultdict(lambda: np.zeros(P))
+
+    for what, payload in sched.events:
+        if what == "comp":
+            dt = payload / flop_rate
+            T += float(dt.max()) if len(dt) else 0.0
+            comp_acc += dt
+            continue
+        pair_bytes: Dict[Tuple[int, int], float] = defaultdict(float)
+        for (s, d, kind, nb_) in payload:
+            pair_bytes[(s, d)] += nb_
+            send_bytes[kind][s] += nb_
+            recv_bytes[kind][d] += nb_
+        round_dt = 0.0
+        for (s, d), nb_ in pair_bytes.items():
+            dt = net.edge_cost(s, d, nb_)
+            comm_acc[s] += dt
+            round_dt = max(round_dt, dt)
+        T += round_dt
+    return SimResult(
+        nranks=P, total_time=T,
         send_bytes=dict(send_bytes), recv_bytes=dict(recv_bytes),
         compute_time=comp_acc, comm_time=comm_acc)

@@ -17,7 +17,8 @@ from .rmsnorm import rmsnorm_pallas
 from .trsm import trsm_pallas
 
 __all__ = ["block_gemm", "block_gemm_acc", "flash_attention", "rmsnorm",
-           "trsm", "use_interpret", "pselinv_level_gemm"]
+           "trsm", "use_interpret", "pselinv_level_gemm",
+           "pselinv_round_gemm"]
 
 
 def use_interpret() -> bool:
@@ -54,6 +55,18 @@ def pselinv_level_gemm(Ainv, Uh_m):
     else:
         p2 = block_gemm_pallas(a2, b2, interpret=use_interpret())
     return p2.reshape(nbr, b, nk, b).transpose(2, 0, 1, 3)
+
+
+def pselinv_round_gemm(Ainv, Uh, cmask):
+    """Masked sweep GEMM keyed by a *round* of the overlapped stream: the
+    struct mask arrives per round boundary (whatever elimination-tree
+    level fires there), not per Python-level loop iteration.
+
+    Ainv: (nbr, nbc, b, b) local A⁻¹ grid; Uh: (nk, nbc, b, b) raw Û
+    stack straight out of the comm arena; cmask: (nk, nbc) struct mask of
+    the firing level. Returns (nk, nbr, b, b) partial products through
+    the same tiled-matmul core as :func:`pselinv_level_gemm`."""
+    return pselinv_level_gemm(Ainv, Uh * cmask[:, :, None, None])
 
 
 def flash_attention(q, k, v, causal=True):

@@ -1,11 +1,18 @@
 """CommPlan IR tests: the single-derivation guarantees.
 
 (a) bytes equivalence — per-rank byte counts summed over the *compiled*
-    executor rounds equal ``simulator.volumes`` on the same
-    structure/grid/tree-kind (simulated bytes == executed bytes);
-(b) oracle — the level-pipelined IR sweep matches the dense inverse on
-    the selected pattern for several (pr, pc, TreeKind) combinations,
-    and agrees with the legacy unrolled sweep;
+    executor rounds (level-serial AND cross-level overlapped) equal
+    ``simulator.volumes`` on the same structure/grid/tree-kind
+    (simulated bytes == executed bytes);
+(b) oracle — the IR sweeps (overlapped and level-serial) match the dense
+    inverse on the selected pattern for several (pr, pc, TreeKind)
+    combinations, and agree with the legacy unrolled sweep;
+(c) overlap — the global round stream respects every producer→consumer
+    round dependence, coalesces multi-block (src,dst) payloads, and
+    issues fewer ppermute rounds than the level-serial path;
+(d) fast-path drift — ``volumes_fast`` is bit-identical to the slow
+    ``volumes`` for all four TreeKinds, including HYBRID at the
+    flat/shifted boundary participant counts (24 and 25);
 plus structural invariants of the level batching and the merged-round
 diagnostics.
 """
@@ -17,11 +24,12 @@ from conftest import run_sub
 
 from repro.core import sparse
 from repro.core.plan import (build_plan, compile_exec, etree_levels,
-                             exec_byte_counts, merge_round_lists)
+                             exec_byte_counts, merge_round_lists,
+                             ppermute_round_count, schedule_overlapped)
 from repro.core.schedule import Grid2D
-from repro.core.simulator import volumes
-from repro.core.symbolic import symbolic_factorize
-from repro.core.trees import TreeKind, build_tree
+from repro.core.simulator import volumes, volumes_fast
+from repro.core.symbolic import BlockStructure, symbolic_factorize
+from repro.core.trees import HYBRID_FLAT_MAX, TreeKind, build_tree
 
 @pytest.fixture(scope="module")
 def lap_bs():
@@ -50,6 +58,215 @@ def test_exec_bytes_match_volumes(lap_bs, pr, pc, kind):
                                inc_v.get("row-reduce", z))
     np.testing.assert_allclose(inc_e.get("row-reduce", z),
                                out_v.get("row-reduce", z))
+
+
+@pytest.mark.parametrize("pr,pc", [(4, 2), (2, 2), (2, 4)])
+@pytest.mark.parametrize("kind",
+                         [TreeKind.FLAT, TreeKind.BINARY, TreeKind.SHIFTED])
+def test_overlapped_bytes_match_volumes(lap_bs, pr, pc, kind):
+    """Coalescing + cross-level interleaving move the same bytes in fewer
+    rounds: the overlapped stream's per-rank byte counts equal the
+    simulator's volumes (and hence the level-serial executor's)."""
+    _, bs = lap_bs
+    grid = Grid2D(pr, pc)
+    plan = build_plan(bs, grid, kind, nb=12)
+    out_e, inc_e = exec_byte_counts(schedule_overlapped(plan))
+    out_v, inc_v = volumes(bs, grid, kind)
+    z = np.zeros(grid.size)
+    for k in ("xfer", "col-bcast"):
+        np.testing.assert_allclose(out_e.get(k, z), out_v.get(k, z))
+        np.testing.assert_allclose(inc_e.get(k, z), inc_v.get(k, z))
+    np.testing.assert_allclose(out_e.get("row-reduce", z),
+                               inc_v.get("row-reduce", z))
+    np.testing.assert_allclose(inc_e.get("row-reduce", z),
+                               out_v.get("row-reduce", z))
+
+
+def _overlap_boundaries(ov):
+    """Round boundary of each (compute kind, level) of the stream."""
+    at = {}
+    for t, ops in enumerate(ov.compute_at):
+        for op in ops:
+            at[(op.kind, op.level)] = t
+    return at
+
+
+@pytest.mark.parametrize("kind", [TreeKind.FLAT, TreeKind.SHIFTED])
+def test_overlapped_respects_round_dependences(lap_bs, kind):
+    """Every producer→consumer dependence of the sweep holds in the
+    global round sequence: a level's xfer-in/col-bcast rounds precede its
+    GEMM boundary, its reduce rounds sit between GEMM and column write,
+    xfer-out follows the write, diag-reduce follows the S computation,
+    the diagonal write follows its reduces — and level L's GEMM fires
+    only after level L-1 finished every A⁻¹ write."""
+    _, bs = lap_bs
+    plan = build_plan(bs, Grid2D(4, 2), kind, nb=12)
+    ov = schedule_overlapped(plan)
+    at = _overlap_boundaries(ov)
+    nlev = len(ov.levels)
+
+    rounds_of = {}          # (kind, level) -> list of round indices
+    for t, rnd in enumerate(ov.rounds):
+        for (_s, _d, k, lv, _nb) in rnd.edges:
+            rounds_of.setdefault((k, lv), []).append(t)
+        for (_dev, k, lv) in rnd.lmoves:
+            rounds_of.setdefault((k, lv), []).append(t)
+
+    for L in range(nlev):
+        tg, tw = at[("gemm", L)], at[("write", L)]
+        ts, td = at[("scomp", L)], at[("diagw", L)]
+        assert tg <= tw <= ts <= td
+        for k in ("xfer", "xfer-local", "col-bcast"):
+            assert all(t < tg for t in rounds_of.get((k, L), []))
+        assert all(tg <= t < tw for t in rounds_of.get(("row-reduce", L), []))
+        for k in ("xfer-out", "xfer-out-local"):
+            assert all(tw <= t < ts for t in rounds_of.get((k, L), []))
+        assert all(ts <= t < td
+                   for t in rounds_of.get(("diag-reduce", L), []))
+        if L:
+            # cross-level serialization of the A⁻¹ writes only
+            prev = rounds_of.get(("xfer-out", L - 1), []) \
+                + rounds_of.get(("xfer-out-local", L - 1), [])
+            assert tg > at[("write", L - 1)]
+            # diagw(L-1) may share gemm(L)'s boundary: compute ops within
+            # one boundary execute in dependence order
+            assert tg >= at[("diagw", L - 1)]
+            assert all(t < tg for t in prev)
+
+    # ...and the point of the exercise: later levels' xfer-in/col-bcast
+    # traffic actually rides rounds *before* the previous level's GEMM
+    # has even fired (no level barrier left)
+    overlapped = [
+        L for L in range(1, nlev)
+        if rounds_of.get(("xfer", L), []) and
+        min(rounds_of[("xfer", L)]) < at[("gemm", L - 1)]]
+    assert overlapped, "no cross-level interleaving happened"
+
+
+@pytest.mark.parametrize("pr,pc", [(4, 2), (2, 2)])
+def test_overlapped_fewer_rounds_and_coalescing(lap_bs, pr, pc):
+    """The overlapped+coalesced stream issues strictly fewer ppermute
+    rounds than the level-serial path, some round carries a multi-block
+    (src,dst) payload, and every round still satisfies the ppermute
+    constraint (unique sources / destinations across pairs, lane count
+    within the coalescing cap)."""
+    _, bs = lap_bs
+    plan = build_plan(bs, Grid2D(pr, pc), TreeKind.SHIFTED, nb=12)
+    ex = compile_exec(plan)
+    ov = schedule_overlapped(plan, coalesce_max=8)
+    assert ppermute_round_count(ov) < ppermute_round_count(ex)
+    assert any(r.width > 1 for r in ov.rounds)
+    for rnd in ov.rounds:
+        if not rnd.perm:        # local-copy-only rounds are legal
+            assert rnd.width == 0 and not rnd.edges and rnd.lwidth
+            continue
+        srcs = [s for s, _ in rnd.perm]
+        dsts = [d for _, d in rnd.perm]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+        assert rnd.width <= 8
+        lanes = {}
+        for (s, d, _k, _lv, _nb) in rnd.edges:
+            lanes[(s, d)] = lanes.get((s, d), 0) + 1
+        assert lanes, rnd
+        assert max(lanes.values()) == rnd.width
+
+
+def test_overlapped_u_stacks_complete_at_gemm_boundary():
+    """Replay only the comm rounds of the overlapped stream (numpy, host
+    side) and check that at every GEMM boundary each participating device
+    holds the exact Û(K,I) = L̂(I,K)ᵀ payload. Regression test for the
+    per-device slot keying: I and I+1 with equal I//pc share a flat Û
+    slot number on different grid columns, and a slot-only dependence key
+    once wired a broadcast's root to the *wrong* xfer-in, shipping zeros
+    (caught at nb=32, grid 4×2, where struct holds consecutive
+    supernodes)."""
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(32, 8)), max_supernode=8)
+    pr, pc = 4, 2
+    plan = build_plan(bs, Grid2D(pr, pc), TreeKind.SHIFTED, nb=32)
+    ov = schedule_overlapped(plan)
+    P, nbr, nbc = pr * pc, ov.nbr, ov.nbc
+    N = ov.n_ainv
+
+    # distinguishable payload per global block (I, K)
+    arena = np.zeros((P, ov.arena_blocks))
+    for K in range(bs.nsuper):
+        for I in bs.struct[K]:
+            I = int(I)
+            dev = (I % pr) * pc + (K % pc)
+            arena[dev, ov.lh_base + (I // pr) * nbc + K // pc] = \
+                1000.0 * I + K
+
+    gemm_at = {t: op for t, ops in enumerate(ov.compute_at)
+               for op in ops if op.kind == "gemm"}
+
+    def check_level(L):
+        lv = ov.levels[L]
+        for k, K in enumerate(lv.Ks):
+            C = [int(x) for x in bs.struct[K]]
+            for I in C:
+                slot = lv.base_u + k * nbc + I // pc
+                need = ({(J % pr) * pc + I % pc for J in C}
+                        | {(K % pr) * pc + I % pc})
+                for dev in need:
+                    assert arena[dev, slot] == 1000.0 * I + K, \
+                        (L, K, I, dev)
+
+    for t, rnd in enumerate(ov.rounds):
+        if t in gemm_at:
+            check_level(gemm_at[t].level)
+        if rnd.lwidth:
+            snap = arena.copy()
+            for dev in range(P):
+                for j in range(rnd.lwidth):
+                    arena[dev, rnd.lscatter[dev, j]] = \
+                        snap[dev, rnd.lgather[dev, j]]
+        if rnd.perm:
+            snap = arena.copy()
+            moved = np.zeros((P, rnd.width))
+            for (s, d) in rnd.perm:
+                moved[d] = snap[s, rnd.gather[s, :rnd.width]]
+            for dev in range(P):
+                for j in range(rnd.width):
+                    arena[dev, rnd.scatter[dev, j]] = (
+                        moved[dev, j]
+                        + rnd.addm[dev, j] * snap[dev, rnd.scatter[dev, j]])
+    if len(ov.rounds) in gemm_at:
+        check_level(gemm_at[len(ov.rounds)].level)
+
+
+def _dense_chain_bs(ns: int, w: int = 1) -> BlockStructure:
+    """Dense lower-triangular block structure: struct(K) = {K+1..ns-1}
+    (a path etree) — every participant count from ns down to 2 appears,
+    which pins the HYBRID flat/shifted boundary exactly."""
+    struct = [np.arange(K + 1, ns, dtype=np.int64) for K in range(ns)]
+    return BlockStructure(
+        offsets=np.arange(ns + 1, dtype=np.int64) * w,
+        struct=struct, a_struct=struct,
+        parent=np.array([K + 1 if K + 1 < ns else -1 for K in range(ns)],
+                        dtype=np.int64))
+
+
+@pytest.mark.parametrize("pr,pc", [(HYBRID_FLAT_MAX + 2, 1),
+                                   (1, HYBRID_FLAT_MAX + 2)])
+@pytest.mark.parametrize("kind", list(TreeKind))
+def test_volumes_fast_bit_identical_at_hybrid_boundary(pr, pc, kind):
+    """``volumes_fast`` must agree bit-for-bit with the slow tree-walking
+    ``volumes`` for every TreeKind — in particular HYBRID straddling the
+    flat→shifted threshold: the dense chain on a 26-rank axis issues
+    collectives with 26, 25, 24, ... participants, so both sides of
+    ``HYBRID_FLAT_MAX = 24`` (and the boundary counts 24/25 themselves)
+    are exercised with the tag-derived shifted rotations."""
+    bs = _dense_chain_bs(HYBRID_FLAT_MAX + 2)
+    grid = Grid2D(pr, pc)
+    out, _ = volumes(bs, grid, kind)
+    fast = volumes_fast(bs, grid, kind)
+    z = np.zeros(grid.size)
+    np.testing.assert_array_equal(out.get("col-bcast", z),
+                                  fast["col-bcast"])
+    np.testing.assert_array_equal(out.get("row-reduce", z),
+                                  fast["row-reduce"])
 
 
 def test_levels_are_independent(lap_bs):
@@ -117,9 +334,10 @@ def test_batched_rounds_uses_shared_merge():
 
 
 def test_ir_sweep_matches_oracle_multi_grid():
-    """The level-pipelined IR sweep reproduces the dense inverse on the
-    selected pattern for two grid shapes / tree kinds, and agrees with
-    the legacy unrolled executor."""
+    """The overlapped IR sweep (the default executor) reproduces the
+    dense inverse on the selected pattern for several grid shapes / tree
+    kinds, and agrees with both the level-serial IR executor and the
+    legacy unrolled executor."""
     run_sub("""
         import numpy as np
         import jax.numpy as jnp
@@ -133,9 +351,12 @@ def test_ir_sweep_matches_oracle_multi_grid():
                                (2, 2, TreeKind.FLAT),
                                (4, 2, TreeKind.BINARY)):
             out, prog = run_distributed(A, b=8, pr=pr, pc=pc, kind=kind,
-                                        dtype=jnp.float64)
+                                        dtype=jnp.float64)   # overlapped
+            out_s, _ = run_distributed(A, b=8, pr=pr, pc=pc, kind=kind,
+                                       dtype=jnp.float64, overlap=False)
             out_u, _ = run_distributed(A, b=8, pr=pr, pc=pc, kind=kind,
                                        dtype=jnp.float64, pipelined=False)
+            assert abs(out - out_s).max() < 1e-12, (pr, pc, kind)
             assert abs(out - out_u).max() < 1e-12, (pr, pc, kind)
             blocks = gather_blocks(out, prog)
             bs = prog.bs

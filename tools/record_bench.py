@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Append this checkout's benchmark rows to the machine-readable perf
+trajectory at the repo root (``BENCH_pselinv.json``).
+
+Part of the verify flow (see ``.claude/skills/verify/SKILL.md``): run
+once per PR so every change lands a ``us_per_call`` row per bench and
+regressions are visible across the PR stack:
+
+    PYTHONPATH=src python tools/record_bench.py [--full] \\
+        [--only selinv] [--rev PR2]
+
+The trajectory file is a JSON list of ``{"rev", "benches", "failed"}``
+entries, one per recorded run; ``benches`` rows are the driver's
+``{name, us_per_call, derived}`` dicts (`benchmarks/common.RESULTS`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="selinv",
+                    help="comma list forwarded to benchmarks.run")
+    ap.add_argument("--rev", default=None,
+                    help="label for this entry (default: git short rev)")
+    ap.add_argument("--out",
+                    default=os.path.join(ROOT, "BENCH_pselinv.json"))
+    args = ap.parse_args()
+
+    fd, tmp = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--only", args.only, "--json", tmp]
+    if args.full:
+        cmd.append("--full")
+    r = subprocess.run(cmd, cwd=ROOT, env=env)
+    # the driver writes the JSON (with its `failed` bench names) even
+    # when it exits non-zero — record the partial session so the
+    # trajectory shows the regression instead of silently skipping it
+    try:
+        with open(tmp) as f:
+            session = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        if r.returncode:
+            raise SystemExit(r.returncode)
+        raise
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+    hist = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            hist = json.load(f)
+    rev = args.rev or git_rev()
+    hist.append({"rev": rev, "benches": session["benches"],
+                 "failed": session["failed"]})
+    with open(args.out, "w") as f:
+        json.dump(hist, f, indent=1)
+        f.write("\n")
+    print(f"[bench] appended rev {rev} ({len(session['benches'])} rows) to "
+          f"{os.path.relpath(args.out, ROOT)}; history={len(hist)} entries")
+    if r.returncode:
+        raise SystemExit(r.returncode)   # recorded, but still a failure
+
+
+if __name__ == "__main__":
+    main()
