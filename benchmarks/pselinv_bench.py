@@ -4,8 +4,10 @@ three-way distributed sweep comparison — legacy unrolled vs level-serial
 IR vs cross-level *overlapped* IR executor — on an 8-device host mesh
 (re-exec'd in a subprocess so the main process stays single-device):
 trace (lower) time, XLA compile time, HLO size, run time, ppermute round
-counts (the overlapped+coalesced stream must issue fewer), and the
-simulated executed-schedule times of both IR paths."""
+counts (the overlapped+coalesced stream must issue fewer), the
+simulated executed-schedule times of both IR paths, and their peak
+arena footprints (the slot-recycled overlapped arena must stay within
+1.5× of the level-serial executor's transient peak)."""
 from __future__ import annotations
 
 import os
@@ -61,7 +63,7 @@ def _ir_compare_child(full: bool):
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.compat import shard_map
-    from repro.core.plan import ppermute_round_count
+    from repro.core.plan import peak_arena_blocks, ppermute_round_count
     from repro.core.pselinv_dist import (build_program,
                                          build_program_unrolled, make_sweep,
                                          make_sweep_overlapped,
@@ -85,6 +87,7 @@ def _ir_compare_child(full: bool):
 
     outs = {}
     rounds = {}
+    peaks = {}
     for name, builder, mk in (
             ("unrolled", build_program_unrolled, make_sweep_unrolled),
             ("ir", build_program, make_sweep),
@@ -106,15 +109,18 @@ def _ir_compare_child(full: bool):
         outs[name] = np.asarray(out)
         if name == "ir":
             rounds["ir"] = ppermute_round_count(prog.exec_plan)
+            peaks["ir"] = peak_arena_blocks(prog.exec_plan)
             sim = simulate_schedule(
                 round_schedule_from_exec(prog.exec_plan, prog.plan))
         elif name == "overlap":
             rounds["overlap"] = ppermute_round_count(prog.overlap_plan)
+            peaks["overlap"] = peak_arena_blocks(prog.overlap_plan)
             sim = simulate_schedule(
                 round_schedule_from_overlap(prog.overlap_plan, prog.plan))
         if name in ("ir", "overlap"):
             csv_row(f"selinv/sweep_{name}_simulated", sim.total_time * 1e6,
-                    f"nb={nb} rounds={rounds[name]}")
+                    f"nb={nb} rounds={rounds[name]} "
+                    f"peak_arena_blocks={sim.peak_arena_blocks}")
         csv_row(f"selinv/sweep_{name}_trace", t_trace * 1e6,
                 f"nb={nb} hlo_lines={hlo_lines}")
         csv_row(f"selinv/sweep_{name}_compile", t_compile * 1e6, f"nb={nb}")
@@ -130,6 +136,12 @@ def _ir_compare_child(full: bool):
     csv_row("selinv/sweep_ppermute_rounds", float(rounds["overlap"]),
             f"nb={nb} serial={rounds['ir']} overlap={rounds['overlap']}")
     assert rounds["overlap"] < rounds["ir"], rounds
+    # memory axis: the recycled overlapped arena must stay within 1.5×
+    # of the level-serial executor's transient peak (was ~3-4× when
+    # every level's stacks stayed live for the whole sweep)
+    csv_row("selinv/sweep_peak_arena_blocks", float(peaks["overlap"]),
+            f"nb={nb} serial={peaks['ir']} overlap={peaks['overlap']}")
+    assert peaks["overlap"] <= 1.5 * peaks["ir"], peaks
     return True
 
 

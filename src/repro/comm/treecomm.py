@@ -34,11 +34,23 @@ __all__ = ["tree_broadcast", "tree_reduce", "tree_allreduce",
 
 
 def _member_mask(axis_name: str, members: Sequence[int]):
+    """Scalar bool: is this device one of ``members``? One ``jnp.isin``
+    against a constant member array — O(1) HLO ops instead of an
+    O(|members|) chain of ``|(idx == r)`` compares (which dominated the
+    lowered program for large subsets)."""
+    if not len(members):
+        return jnp.zeros((), dtype=bool)
     idx = lax.axis_index(axis_name)
-    m = jnp.zeros((), dtype=bool)
-    for r in members:
-        m = m | (idx == r)
-    return m
+    return jnp.isin(idx, jnp.asarray(sorted(members), dtype=idx.dtype))
+
+
+def _recv_mask(idx, perm: List[Tuple[int, int]]):
+    """Scalar bool: does this device receive in ``perm``? Same single
+    ``jnp.isin``-against-a-constant shape as :func:`_member_mask`."""
+    dsts = sorted({d for _, d in perm})
+    if not dsts:
+        return jnp.zeros((), dtype=bool)
+    return jnp.isin(idx, jnp.asarray(dsts, dtype=idx.dtype))
 
 
 def _apply_bcast_rounds(x, rounds: List[List[Tuple[int, int]]], axis_name: str):
@@ -47,9 +59,7 @@ def _apply_bcast_rounds(x, rounds: List[List[Tuple[int, int]]], axis_name: str):
     idx = lax.axis_index(axis_name)
     for perm in rounds:
         moved = lax.ppermute(x, axis_name, perm)
-        recv = jnp.zeros((), dtype=bool)
-        for _, dst in perm:
-            recv = recv | (idx == dst)
+        recv = _recv_mask(idx, perm)
         x = jax.tree_util.tree_map(
             lambda m, o: jnp.where(recv, m, o), moved, x)
     return x
@@ -60,9 +70,7 @@ def _apply_reduce_rounds(x, rounds: List[List[Tuple[int, int]]], axis_name: str)
     idx = lax.axis_index(axis_name)
     for perm in rounds:
         moved = lax.ppermute(x, axis_name, perm)
-        recv = jnp.zeros((), dtype=bool)
-        for _, dst in perm:
-            recv = recv | (idx == dst)
+        recv = _recv_mask(idx, perm)
         x = jax.tree_util.tree_map(
             lambda m, o: jnp.where(recv, o + m, o), moved, x)
     return x

@@ -41,10 +41,15 @@ therefore drops the level barrier entirely: every comm edge, local copy
 and compute op of the whole sweep becomes a node of one dependence DAG
 (:func:`_overlap_items` documents the exact edge set), which is
 list-scheduled into a single global sequence of ppermute rounds over a
-flat per-device block **arena** (A⁻¹ | L̂ | per-level Û/partial/S stacks
-| trash). Compute fires at round boundaries; level L+1's xfer-in rides
-the same rounds as level L's reduce and diagonal traffic — the paper's
-§3 asynchronous pipelining *across* levels, not just within one.
+flat per-device block **arena** (A⁻¹ | L̂ | compact recycled Û slot
+pool | one shared partial region | one shared S region | trash — a
+level's stacks are live only between their first fill and their last
+reader, so non-overlapping generations alias the same physical slots
+and generation-keyed WAR anti-dependences serialize the reuse; see
+:func:`_u_pool_layout` / :func:`_overlap_items`). Compute fires at
+round boundaries; level L+1's xfer-in rides the same rounds as level
+L's reduce and diagonal traffic — the paper's §3 asynchronous
+pipelining *across* levels, not just within one.
 
 **Coalescing rule**: within one round, a (src, dst) device pair may
 carry up to ``coalesce_max`` blocks as extra lanes of the same permute
@@ -77,6 +82,7 @@ __all__ = [
     "compile_exec", "exec_byte_counts", "etree_levels",
     "GlobalRound", "ComputeOp", "OverlapLevel", "OverlappedExec",
     "schedule_overlapped", "overlapped_byte_counts", "ppermute_round_count",
+    "peak_arena_blocks",
 ]
 
 
@@ -626,9 +632,16 @@ class ComputeOp:
 @dataclass
 class OverlapLevel:
     """Per-level compute metadata of the overlapped stream (the masks of
-    :class:`LevelExec`) plus the level's arena block offsets."""
+    :class:`LevelExec`) plus the level's arena addressing. ``u_gather``
+    replaces the dense Û base offset: the level's Û blocks live in
+    compact recycled pool slots (:func:`_u_pool_layout`), and the table
+    maps the GEMM's dense (k, j) lane grid back onto them (trash where
+    no struct entry exists — the struct mask zeroes those lanes).
+    ``base_p``/``base_s`` point into the single *shared* partial / S
+    regions every generation aliases; the scheduler's anti-dependences
+    keep aliased occupancies disjoint in time."""
     Ks: np.ndarray
-    base_u: int                    # Û stack offset (nk*nbc blocks)
+    u_gather: np.ndarray           # (P, nk*nbc) arena addresses of Û lanes
     base_p: int                    # partial stack offset (nk*nbr blocks)
     base_s: int                    # diagonal S stack offset (nk blocks)
     cmask: np.ndarray              # (pc, nk, nbc)
@@ -648,8 +661,14 @@ class OverlappedExec:
     compute ops pinned to round boundaries (``compute_at[t]`` runs before
     round ``t``; the final entry after the last round). The arena is one
     flat per-device block buffer: [0, n_ainv) A⁻¹, [lh_base, lh_base +
-    n_ainv) the read-only L̂ shard, then each level's Û / partial / S
-    stacks, with the shared trash block last."""
+    n_ainv) the read-only L̂ shard, then the compact recycled Û slot
+    pool (:func:`_u_pool_layout`), then **one** shared partial region
+    and one shared S region that every elimination-tree level aliases
+    (their liveness never spans two levels), with the shared trash block
+    last. Generations that alias the same physical slots are separated
+    in time by the scheduler's generation-keyed anti-dependences (see
+    :func:`_overlap_items`), so the arena footprint no longer grows with
+    the number of levels."""
     nb: int
     pr: int
     pc: int
@@ -662,6 +681,8 @@ class OverlappedExec:
     levels: List[OverlapLevel]
     rounds: List[GlobalRound]
     compute_at: List[List[ComputeOp]]   # len == len(rounds) + 1
+    window: int | None = None      # Û pool liveness window (None = whole
+                                   # sweep resident, no Û recycling)
 
     @property
     def nbr(self) -> int:
@@ -727,60 +748,227 @@ def ppermute_round_count(ex: "ExecPlan | OverlappedExec") -> int:
                for lv in ex.levels)
 
 
-def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
-                                            int, int, int]:
+def peak_arena_blocks(ex: "ExecPlan | OverlappedExec") -> int:
+    """Peak per-device working-buffer footprint of a compiled sweep, in
+    (b, b) blocks — the memory axis of the scalability story (the
+    symmetric-case PSelInv paper's per-process memory bound).
+
+    Level-serial: A⁻¹ (N + 1 trash) + the input L̂ shard (N, read in
+    place) + the largest level's transient Û/partial/S stacks (one
+    trash block each, freed at the level barrier). Overlapped: the flat
+    arena (A⁻¹ + an arena *copy* of L̂ + the compact recycled Û pool +
+    the shared partial/S regions + trash, :class:`OverlappedExec`)
+    **plus** the resident input L̂ shard itself — the executor copies L̂
+    into the arena so rounds can gather from one buffer, and the input
+    stays live for the whole call, so both copies count. The read-only
+    D⁻¹ shard (N blocks) is input-resident in both paths and excluded,
+    so the two numbers compare like for like; before slot recycling the
+    overlapped arena dense-stacked *every* level's Û/partial/S and
+    peaked at ~3× the serial path at nb=32 (now ~1.2×; gathering
+    xfer-in straight from the input shard would shave the copy's N
+    blocks — ROADMAP open item)."""
+    N = ex.nbr * ex.nbc
+    if isinstance(ex, OverlappedExec):
+        return ex.arena_blocks + N
+    lvl = max((len(lv.Ks) * (ex.nbc + ex.nbr + 1) + 3 for lv in ex.levels),
+              default=0)
+    return 2 * N + 1 + lvl
+
+
+def _u_pool_layout(plan: CommPlan, window: int | None
+                   ) -> Tuple[List[Dict[Tuple[int, int], Tuple[int, int]]],
+                              int]:
+    """The overlapped arena's Û **slot allocator**: compact, per-column,
+    liveness-window recycled.
+
+    The level-serial executor's dense Û indexing (slot ``k*nbc + I//pc``)
+    reserves ``nk*nbc`` blocks per level although only struct-present
+    (K, I) pairs are ever filled; summed over every level of the sweep
+    that dense layout is what blew the overlapped arena to ~3-4× the
+    serial peak. Here each level's Û stack gets one compact slot per
+    live (K, I) entry instead, allocated **per grid column** (a block
+    Û(K, I) only exists on the devices of column ``I % pc``, so the two
+    columns' allocators share the same address range — the same arena
+    address holds different blocks on different columns, exactly like
+    the dense layout's repeated slot numbers, and the dependence keys
+    stay (device, slot, generation)).
+
+    Liveness: a level's Û slots are written from its first xfer-in and
+    last read by its ``scomp`` — so a slot is *dead* once its tenant
+    level's scomp has fired. The allocator hands out fresh addresses
+    while a column's pool is under its cap and otherwise **recycles the
+    oldest freed slot** (FIFO by tenant level), recording the previous
+    tenant's generation so the scheduler can key the WAR anti-dependence
+    on that tenant's scomp. ``window=None`` (the default) sets the cap
+    to the whole sweep — no Û recycling, which preserves the
+    unthrottled prefetch schedule (round counts unchanged) while the
+    compaction alone keeps the pool below one level's dense stack.
+    ``window=w`` caps each column's pool at the largest total of ``w``
+    consecutive levels, i.e. at most ~w adjacent generations live.
+
+    Returns (per level: {(k, I) -> (address, previous-tenant level or
+    -1)}, pool size in blocks). Addresses are relative to the pool
+    base."""
+    from collections import deque
+
+    pc = plan.grid.pc
+    bs = plan.bs
+    nlev = len(plan.sweep_levels)
+    entries: List[Dict[int, List[Tuple[int, int]]]] = []
+    for Ks in plan.sweep_levels:
+        per_c: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+        for k, K in enumerate(Ks):
+            for I in bs.struct[K]:
+                I = int(I)
+                per_c[I % pc].append((k, I))
+        entries.append({c: sorted(v) for c, v in per_c.items()})
+
+    caps: Dict[int, int] = {}
+    for c in range(pc):
+        sizes = [len(entries[L].get(c, ())) for L in range(nlev)]
+        if window is None:
+            caps[c] = sum(sizes)
+        else:
+            w = max(1, int(window))
+            caps[c] = max((sum(sizes[i:i + w])
+                           for i in range(max(1, nlev - w + 1))), default=0)
+
+    out: List[Dict[Tuple[int, int], Tuple[int, int]]] = []
+    used = {c: 0 for c in range(pc)}
+    free_q: Dict[int, deque] = {c: deque() for c in range(pc)}
+    for L in range(nlev):
+        amap: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        for c, ents in entries[L].items():
+            for (k, I) in ents:
+                if used[c] < caps[c] or not free_q[c]:
+                    amap[(k, I)] = (used[c], -1)
+                    used[c] += 1
+                else:
+                    addr, tenant = free_q[c].popleft()
+                    amap[(k, I)] = (addr, tenant)
+        for c, ents in entries[L].items():     # dead after scomp(L)
+            for (k, I) in ents:
+                free_q[c].append((amap[(k, I)][0], L))
+        out.append(amap)
+    return out, max(used.values(), default=0)
+
+
+def _overlap_items(plan: CommPlan, window: int | None = None
+                   ) -> Tuple[List[_Item], List[OverlapLevel],
+                              int, int, int]:
     """Lower the CommPlan into the overlapped item DAG.
 
     Returns (items, level metadata, n_ainv, lh_base, arena_blocks).
-    Dependence model (RAW/WAR hazards on the arena are encoded as deps;
-    every arena slot has exactly one writer item, reductions accumulate
-    through dep-ordered adds):
+    Dependence model — RAW *and* WAR hazards on the arena are encoded as
+    deps; reductions accumulate through dep-ordered adds:
 
-      xfer-in(L)           — none (reads the static L̂ shard)
+      xfer-in(L)           — scomp(T) of the previous tenant T of its
+                             recycled Û slot (WAR; no deps on fresh
+                             slots — the payload only reads the static
+                             L̂ shard)
       col-bcast(L) edge    — its in-tree parent edge; tree-root edges the
                              xfer-in item that filled the root's Û slot
+                             (generation-keyed, see below)
       gemm(L)              — all xfer-in/col-bcast of L, plus every A⁻¹
                              write of level L-1 (write/xfer-out/diagw;
-                             transitively all shallower levels)
+                             transitively all shallower levels), plus
+                             write(L-1) (WAR: the shared partial region's
+                             previous generation must be fully read)
       row-reduce(L) edge   — in-tree children edges + gemm(L)
       write(L)             — gemm(L) + all row-reduce(L)
       xfer-out(L)          — write(L)
-      scomp(L)             — write(L) + all xfer-out(L)
+      scomp(L)             — write(L) + all xfer-out(L) + diagw(L-1)
+                             (WAR on the shared S region)
       diag-reduce(L) edge  — in-tree children edges + scomp(L)
       diagw(L)             — scomp(L) + all diag-reduce(L)
 
     Only the gemm→…→diagw chain serializes across levels; every
     xfer-in/col-bcast round of level L+1 is free to interleave with
     level L's GEMM-side rounds — the paper's §3 asynchronous pipelining
-    across elimination-tree levels."""
+    across elimination-tree levels.
+
+    **Liveness windows / slot recycling.** A level's Û slots are live
+    from their fill to the level's scomp, the partial stack from gemm to
+    write, the S stack from scomp to diagw. The partial and S stacks of
+    different levels therefore *never* overlap in time — the compute
+    chain itself separates the generations — so the arena keeps exactly
+    **one** shared partial region and one shared S region (sized for the
+    largest level), aliased by every generation at zero scheduling cost:
+    the WAR deps ``write(L-1)`` / ``diagw(L-1)`` above are already
+    implied by the RAW chain and encoded explicitly so the hazard model
+    survives refactors. Û slots come from the compact recycled pool of
+    :func:`_u_pool_layout`; a recycled slot's fill carries the previous
+    tenant's ``scomp`` as an anti-dependence — ``scomp(T)`` dominates
+    every reader of tenant T's slots (the broadcast forwards and the
+    gemm all precede it by RAW deps), so one dep per slot suffices. The
+    peak footprint drops from ~3× the level-serial executor's transient
+    peak (O(Σ_L nk_L · nbc) dense-stacked blocks) to ~1.2×
+    (:func:`peak_arena_blocks`, regression-guarded in the bench)."""
     grid, nb = plan.grid, plan.nb
     pr, pc = grid.pr, grid.pc
     if nb % pr or nb % pc:
         raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
+    if window is not None and window < 1:
+        raise ValueError(f"window={window} must be >= 1 (or None)")
     nbr, nbc = nb // pr, nb // pc
     bs = plan.bs
     by_sn = plan.ops_by_supernode()
     N = nbr * nbc
     lh_base = N
-    off = 2 * N
+
+    # ---- arena layout: compact recycled Û pool + one shared partial
+    # region + one shared S region (single-generation liveness) ---------
+    u_pool, u_size = _u_pool_layout(plan, window)
+    u_base = 2 * N
+    base_p = u_base + u_size
+    base_s = base_p + max((len(Ks) * nbr for Ks in plan.sweep_levels),
+                          default=0)
+    arena_blocks = base_s + max((len(Ks) for Ks in plan.sweep_levels),
+                                default=0) + 1
+    trash = arena_blocks - 1
 
     items: List[_Item] = []
     levels: List[OverlapLevel] = []
     prev_writers: List[int] = []       # A⁻¹-writing items of level L-1
+    # last reader of each region per level (generation): recycling keys
+    # the anti-dependence on the previous tenant's entry
+    write_of: List[int] = []
+    scomp_of: List[int] = []
+    diagw_of: List[int] = []
+
+    # (device, Û arena slot, generation) -> the xfer-in item that fills
+    # it. The device is part of the key: the per-column allocators share
+    # one address range, so equal slot numbers on *different* grid
+    # columns hold different blocks, and a slot-only key would wire a
+    # broadcast's root to the wrong fill. The *generation* (= level) is
+    # part of the key because recycling makes slot numbers repeat across
+    # levels: a (device, slot)-only lookup could resolve to the previous
+    # tenant's fill and ship stale data into a broadcast
+    u_filler: Dict[Tuple[int, int, int], int] = {}
 
     for L, Ks in enumerate(plan.sweep_levels):
         nk = len(Ks)
         k_of = {K: k for k, K in enumerate(Ks)}
-        base_u, base_p, base_s = off, off + nk * nbc, off + nk * (nbc + nbr)
-        off = base_s + nk
 
         tabs = _level_tables(plan, Ks)
 
-        # (device, Û arena slot) -> the xfer-in item that fills it. The
-        # device is part of the key: I and I+1 with I//pc == (I+1)//pc
-        # share the flat slot number on *different* grid columns, so a
-        # slot-only key would wire a broadcast's root to the wrong fill
-        u_filler: Dict[Tuple[int, int], int] = {}
+        # this level's Û slots: arena address + WAR dep (the previous
+        # tenant's scomp) per (k, I) entry
+        def u_slot(k: int, I: int) -> Tuple[int, List[int]]:
+            addr, tenant = u_pool[L][(k, I)]
+            return (u_base + addr,
+                    [scomp_of[tenant]] if tenant >= 0 else [])
+
+        # per-device gather table feeding the level GEMM / S einsum:
+        # entry k*nbc + j holds the arena address of Û(K_k, j*pc + c) on
+        # a column-c device, or the trash block where no struct entry
+        # exists (the struct mask zeroes those lanes before use)
+        u_gather = np.full((grid.size, nk * nbc), trash, np.int32)
+        for (k, I), (addr, _tenant) in u_pool[L].items():
+            for rho in range(pr):
+                u_gather[rho * pc + I % pc, k * nbc + I // pc] = \
+                    u_base + addr
+
         xi_bc_ids: List[int] = []
         red_ids: List[int] = []
         xo_ids: List[int] = []
@@ -795,24 +983,25 @@ def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
             C = [int(i) for i in bs.struct[K]]
             for I in C:
                 if grid.owner(I, K) == grid.owner(K, I):
-                    slot = base_u + k * nbc + I // pc
-                    u_filler[(grid.owner(K, I), slot)] = _add(_Item(
-                        prio=(L, _PH_XI, len(items)), local=True,
+                    slot, war = u_slot(k, I)
+                    i = _add(_Item(
+                        prio=(L, _PH_XI, len(items)), deps=war,
+                        local=True,
                         src=grid.owner(I, K), dst=grid.owner(I, K),
                         gslot=lh_base + (I // pr) * nbc + K // pc,
                         dslot=slot, transpose=True, kind="xfer-local",
                         level=L))
-
-        xi_bc_ids.extend(u_filler.values())     # the owner-local fills
+                    u_filler[(grid.owner(K, I), slot, L)] = i
+                    xi_bc_ids.append(i)         # the owner-local fills
         for K in Ks:
             k = k_of[K]
             for op in by_sn.get(K, ()):
                 if op.kind == "xfer":
                     I = op.block
                     dst = [r for r in op.participants if r != op.root][0]
-                    slot = base_u + k * nbc + I // pc
-                    u_filler[(dst, slot)] = i = _add(_Item(
-                        prio=(L, _PH_XI, len(items)),
+                    slot, war = u_slot(k, I)
+                    u_filler[(dst, slot, L)] = i = _add(_Item(
+                        prio=(L, _PH_XI, len(items)), deps=war,
                         src=op.root, dst=dst,
                         gslot=lh_base + (I // pr) * nbc + K // pc,
                         dslot=slot, transpose=True, kind="xfer",
@@ -820,16 +1009,16 @@ def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
                     xi_bc_ids.append(i)
                 elif op.kind == "col-bcast":
                     I = op.block
-                    slot = base_u + k * nbc + I // pc
+                    slot, war = u_slot(k, I)
                     flat = [e for rnd in op.tree.bcast_rounds() for e in rnd]
                     delivered: Dict[int, int] = {}
                     for (s, d) in flat:
                         if s in delivered:
                             deps = [delivered[s]]
-                        elif (s, slot) in u_filler:
-                            deps = [u_filler[(s, slot)]]
+                        elif (s, slot, L) in u_filler:
+                            deps = [u_filler[(s, slot, L)]]
                         else:
-                            deps = []
+                            deps = list(war)
                         delivered[d] = _add(_Item(
                             prio=(L, _PH_BC, len(items)), deps=deps,
                             src=s, dst=d, gslot=slot, dslot=slot,
@@ -844,8 +1033,13 @@ def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
                         "teach it the new kind or the executed schedule "
                         "silently drifts from the simulated one")
 
+        # WAR on the shared partial region: write(L-1) is its previous
+        # generation's last reader (transitively implied by the
+        # gemm→write chain, but encoded explicitly so the hazard model
+        # survives refactors)
         gemm_id = _add(_Item(prio=(L, _PH_BC, len(items)),
-                             deps=xi_bc_ids + prev_writers,
+                             deps=xi_bc_ids + prev_writers
+                             + ([write_of[L - 1]] if L else []),
                              compute="gemm", level=L))
 
         for K in Ks:
@@ -897,8 +1091,12 @@ def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
                     transpose=True, kind="xfer-out", level=L,
                     nbytes=op.nbytes)))
 
+        # WAR on the shared S region: diagw(L-1) is its previous
+        # generation's last reader (also transitively implied; explicit
+        # for the same reason)
         scomp_id = _add(_Item(prio=(L, _PH_XO, len(items)),
-                              deps=[write_id] + xo_ids,
+                              deps=[write_id] + xo_ids
+                              + ([diagw_of[L - 1]] if L else []),
                               compute="scomp", level=L))
 
         for K in Ks:
@@ -925,15 +1123,18 @@ def _overlap_items(plan: CommPlan) -> Tuple[List[_Item], List[OverlapLevel],
                               compute="diagw", level=L))
 
         prev_writers = [write_id, diagw_id] + xo_ids
+        write_of.append(write_id)
+        scomp_of.append(scomp_id)
+        diagw_of.append(diagw_id)
         levels.append(OverlapLevel(
             Ks=np.asarray(Ks, dtype=np.int64),
-            base_u=base_u, base_p=base_p, base_s=base_s, **tabs))
+            u_gather=u_gather, base_p=base_p, base_s=base_s, **tabs))
 
-    return items, levels, N, lh_base, off + 1
+    return items, levels, N, lh_base, arena_blocks
 
 
-def schedule_overlapped(plan: CommPlan,
-                        coalesce_max: int = 8) -> OverlappedExec:
+def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
+                        window: int | None = None) -> OverlappedExec:
     """Compile the IR into the cross-level overlapped executable form.
 
     List-schedules the item DAG of :func:`_overlap_items` into one global
@@ -949,10 +1150,26 @@ def schedule_overlapped(plan: CommPlan,
     pair), so the global round count drops below the level-serial path's.
     Ready edges are packed lowest-(level, phase) first, which keeps the
     critical path as tight as the serial schedule while later levels'
-    traffic fills the idle lanes."""
+    traffic fills the idle lanes.
+
+    Arena memory: the partial and S stacks always live in one shared
+    region per kind (their liveness never spans two levels), and the Û
+    stacks come from the compact recycled slot pool of
+    :func:`_u_pool_layout`. ``window`` caps how many adjacent levels' Û
+    generations may be live at once — the anti-dependences of
+    :func:`_overlap_items` serialize generations that alias a slot, so
+    a tighter window trades prefetch depth (and, on this DAG shape,
+    ppermute rounds: delayed fills contend with the critical-path tree
+    traffic for permute slots) for arena blocks. The default ``None``
+    keeps every level's compact Û slots resident, which preserves the
+    unthrottled round count while the compaction + partial/S recycling
+    already hold the peak footprint to ~1.2× the level-serial
+    executor's (:func:`peak_arena_blocks`, asserted ≤1.5× in the
+    bench)."""
     grid = plan.grid
     P = grid.size
-    items, levels, N, lh_base, arena_blocks = _overlap_items(plan)
+    items, levels, N, lh_base, arena_blocks = _overlap_items(
+        plan, window=window)
     trash = arena_blocks - 1
 
     droot = np.array([grid.owner(K, K) for K in plan.diag_only], np.int32)
@@ -1053,8 +1270,11 @@ def schedule_overlapped(plan: CommPlan,
                     fired[i] = t
                     remaining.discard(i)
 
-        # every non-trash write this round is unique per device (one
-        # writer per arena slot; reductions accumulate across rounds)
+        # every non-trash write this round is unique per device. Across
+        # rounds a slot may host several writers — reductions accumulate,
+        # and recycled regions carry one generation per liveness window —
+        # but within one round two lanes landing in the same (device,
+        # slot) would silently drop a payload
         for dev in range(P):
             w = [x for x in scatter[dev] if x != trash]
             if lwidth:
@@ -1063,7 +1283,8 @@ def schedule_overlapped(plan: CommPlan,
                 raise ValueError(
                     f"overlapped round {t}: device {dev} scatters twice "
                     f"into the same arena slot ({sorted(w)}) — the "
-                    "one-writer-per-(device, slot) invariant is broken")
+                    "one-writer-per-(device, slot, round) invariant is "
+                    "broken")
 
         rounds.append(GlobalRound(
             perm=perm, width=width,
@@ -1079,4 +1300,4 @@ def schedule_overlapped(plan: CommPlan,
         nb=plan.nb, pr=grid.pr, pc=grid.pc, n_ainv=N, lh_base=lh_base,
         arena_blocks=arena_blocks, trash=trash,
         diag_set_root=droot, diag_set_slot=dslot,
-        levels=levels, rounds=rounds, compute_at=compute_at)
+        levels=levels, rounds=rounds, compute_at=compute_at, window=window)

@@ -92,7 +92,8 @@ class PSelInvProgram:
 def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
                   kind: TreeKind = TreeKind.SHIFTED,
                   overlap: bool = False,
-                  coalesce_max: int = 8) -> PSelInvProgram:
+                  coalesce_max: int = 8,
+                  window: int | None = None) -> PSelInvProgram:
     """Build the CommPlan IR and compile it to executable tables.
 
     ``overlap=True`` compiles the cross-level overlapped round stream
@@ -101,14 +102,19 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     :class:`ExecPlan` for :func:`make_sweep` (the A/B baseline). Only
     the requested lowering is compiled — an A/B caller builds one
     program per executor (as ``benchmarks/pselinv_bench.py`` does), or
-    runs ``plan.compile_exec(prog.plan)`` on the shared CommPlan."""
-    assert nb % pr == 0 and nb % pc == 0
+    runs ``plan.compile_exec(prog.plan)`` on the shared CommPlan.
+    ``window`` caps the overlapped arena's Û pool at that many live
+    levels (None = whole sweep resident; see
+    ``plan.schedule_overlapped``)."""
+    if nb % pr or nb % pc:
+        raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
     from .schedule import Grid2D
     plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
     return PSelInvProgram(
         nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
         exec_plan=None if overlap else compile_exec(plan),
-        overlap_plan=(schedule_overlapped(plan, coalesce_max=coalesce_max)
+        overlap_plan=(schedule_overlapped(plan, coalesce_max=coalesce_max,
+                                          window=window)
                       if overlap else None))
 
 
@@ -276,8 +282,11 @@ def make_sweep_overlapped(prog: PSelInvProgram):
     global round stream (`plan.schedule_overlapped`).
 
     One flat per-device **arena** of (b, b) blocks holds A⁻¹, the
-    read-only L̂ shard, and every level's Û / partial / S stacks; the
-    sweep is a single sequence of coalesced multi-lane ppermute rounds
+    read-only L̂ shard, the compact recycled Û slot pool, and the shared
+    partial / S regions every level aliases (liveness windows +
+    generation-keyed anti-dependences in the scheduler make the reuse
+    safe — the executor just follows the tables); the sweep is a single
+    sequence of coalesced multi-lane ppermute rounds
     with per-lane gather/scatter/accumulate/transpose tables, and the
     masked level GEMMs (plus column/diagonal writes) fire at the round
     boundaries the dependence scheduler pinned them to — level L+1's
@@ -313,13 +322,19 @@ def make_sweep_overlapped(prog: PSelInvProgram):
                 m[:, None, None] * gi(Dinv_f, slots),
                 mode="promise_in_bounds")
 
+        def gather_u(lv, nk, arena):
+            # the level's Û lanes live in compact recycled pool slots;
+            # the per-device table maps the dense (k, j) lane grid back
+            # onto them (trash lanes are struct-masked before use)
+            ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
+            return gi(arena, ut).reshape(nk, nbc, b, b)
+
         def apply_compute(op, arena):
             lv = ov.levels[op.level]
             nk = len(lv.Ks)
             cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
             if op.kind == "gemm":
-                U = lax.slice_in_dim(arena, lv.base_u, lv.base_u + nk * nbc
-                                     ).reshape(nk, nbc, b, b)
+                U = gather_u(lv, nk, arena)
                 Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
                 partial = pselinv_round_gemm(Ainv, U, cm)
                 return lax.dynamic_update_slice(
@@ -346,8 +361,7 @@ def make_sweep_overlapped(prog: PSelInvProgram):
                 return lax.dynamic_update_slice(
                     arena, Ainv.reshape(N, b, b), (0, 0, 0))
             if op.kind == "scomp":
-                U = lax.slice_in_dim(arena, lv.base_u, lv.base_u + nk * nbc
-                                     ).reshape(nk, nbc, b, b)
+                U = gather_u(lv, nk, arena)
                 Uh_m = U * cm[:, :, None, None]
                 Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
                 Arow = gi(Ainv, jnp.asarray(lv.krs))
@@ -452,7 +466,8 @@ def build_program_unrolled(bs: BlockStructure, nb: int, b: int, pr: int,
     """The pre-IR per-supernode schedule (one tree per mesh column/row per
     supernode, re-derived here rather than read from the CommPlan).
     Retained as the baseline of the compile-time benchmark."""
-    assert nb % pr == 0 and nb % pc == 0
+    if nb % pr or nb % pc:
+        raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
     nbr, nbc = nb // pr, nb // pc
 
     def owner(I: int, J: int) -> int:
@@ -651,9 +666,19 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
 
     A = sp.csr_matrix(A)
     n = A.shape[0]
-    assert n % b == 0, "pad the matrix to a multiple of the block size"
+    # real input validation, not asserts: these guard user-provided
+    # matrices and must survive ``python -O``
+    if n % b:
+        raise ValueError(
+            f"matrix size n={n} is not a multiple of the supernode block "
+            f"size b={b} — pad the matrix (or pick b dividing n)")
     bs = symbolic_factorize(A, max_supernode=b)
-    assert np.all(bs.widths() == b), "uniform-width supernodes required"
+    if not np.all(bs.widths() == b):
+        raise ValueError(
+            f"symbolic factorization produced non-uniform supernode "
+            f"widths {sorted(set(bs.widths().tolist()))} — the "
+            f"dense-blocked layout requires every supernode to have "
+            f"width exactly b={b}")
     nb0 = bs.nsuper
     # pad supernode count so both grid dims divide it
     nb = nb0
@@ -694,6 +719,13 @@ def run_distributed(A, b: int, pr: int, pc: int,
     unrolled sweep (same numerics, larger HLO)."""
     from jax.sharding import Mesh, PartitionSpec as P
 
+    avail = len(jax.devices())
+    if pr * pc > avail:
+        raise ValueError(
+            f"process grid {pr}x{pc} needs {pr * pc} devices but only "
+            f"{avail} JAX device(s) are available — shrink the grid or "
+            "launch with more devices (e.g. XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={pr * pc})")
     bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
     if pipelined:
         prog = build_program(bs, nb, b, pr, pc, kind=kind, overlap=overlap)

@@ -29,7 +29,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .plan import (CommPlan, ExecPlan, OverlappedExec, PlanOp, build_plan)
+from .plan import (CommPlan, ExecPlan, OverlappedExec, PlanOp, build_plan,
+                   peak_arena_blocks)
 from .schedule import BYTES_PER_ELT, ComputeTask, Grid2D
 from .symbolic import BlockStructure
 from .trees import HYBRID_FLAT_MAX, TreeKind, cached_tree
@@ -64,6 +65,10 @@ class SimResult:
     recv_bytes: Dict[str, np.ndarray]
     compute_time: np.ndarray                 # per-rank busy seconds
     comm_time: np.ndarray                    # per-rank link-busy seconds
+    #: peak per-device working-buffer footprint in (b, b) blocks of the
+    #: schedule that was timed (``plan.peak_arena_blocks``; 0 when the
+    #: simulation was not built from a compiled schedule)
+    peak_arena_blocks: int = 0
 
     def comm_to_comp_ratio(self) -> float:
         c = float(self.compute_time.sum())
@@ -418,9 +423,14 @@ class RoundSchedule:
     from the same :class:`~.plan.ExecPlan` / :class:`~.plan.OverlappedExec`
     the device program runs, so the time :func:`simulate_schedule` reports
     is the time of the schedule that *executes* — the overlapped stream
-    is accounted round for round, not approximated per supernode."""
+    is accounted round for round, not approximated per supernode.
+    ``peak_arena_blocks`` carries the compiled schedule's per-device
+    peak block footprint (``plan.peak_arena_blocks``) so the serial /
+    overlapped comparison covers the memory axis, not just time —
+    regression guard for the arena slot recycling."""
     nranks: int
     events: List[Tuple[str, object]]
+    peak_arena_blocks: int = 0
 
 
 def _level_task_flops(plan: CommPlan, Ks, kind: str) -> np.ndarray:
@@ -451,7 +461,8 @@ def round_schedule_from_exec(ex: ExecPlan, plan: CommPlan) -> RoundSchedule:
         comm(lv.xfer_out, "xfer-out")
         comm(lv.diag_reduce, "diag-reduce")
         events.append(("comp", _level_task_flops(plan, lv.Ks, "diag")))
-    return RoundSchedule(nranks=ex.pr * ex.pc, events=events)
+    return RoundSchedule(nranks=ex.pr * ex.pc, events=events,
+                         peak_arena_blocks=peak_arena_blocks(ex))
 
 
 def round_schedule_from_overlap(ov: OverlappedExec,
@@ -473,7 +484,8 @@ def round_schedule_from_overlap(ov: OverlappedExec,
                 events.append(("comm", [(s, d, kind, nb_)
                                         for (s, d, kind, _lv, nb_)
                                         in rnd.edges]))
-    return RoundSchedule(nranks=ov.pr * ov.pc, events=events)
+    return RoundSchedule(nranks=ov.pr * ov.pc, events=events,
+                         peak_arena_blocks=peak_arena_blocks(ov))
 
 
 def simulate_schedule(sched: RoundSchedule,
@@ -483,7 +495,9 @@ def simulate_schedule(sched: RoundSchedule,
     (coalesced lanes of one pair share the latency and serialize their
     bytes), a compute boundary when its busiest rank does. Comparing the
     level-serial and the overlapped :class:`RoundSchedule` of one plan
-    quantifies the cross-level overlap win under the same network."""
+    quantifies the cross-level overlap win under the same network; the
+    result also carries the schedule's ``peak_arena_blocks`` so the
+    comparison covers per-device memory alongside time."""
     model = model or NetworkModel()
     P = sched.nranks
     net = _Net(model, P)
@@ -515,4 +529,5 @@ def simulate_schedule(sched: RoundSchedule,
     return SimResult(
         nranks=P, total_time=T,
         send_bytes=dict(send_bytes), recv_bytes=dict(recv_bytes),
-        compute_time=comp_acc, comm_time=comm_acc)
+        compute_time=comp_acc, comm_time=comm_acc,
+        peak_arena_blocks=sched.peak_arena_blocks)

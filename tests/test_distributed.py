@@ -1,6 +1,28 @@
 """Distributed tests — run in subprocesses with their own XLA device
 count (8 host devices), so the main pytest process stays single-device."""
+import pytest
+
 from conftest import run_sub
+
+
+def test_run_distributed_validates_grid_and_inputs():
+    """An oversized process grid raises a ValueError naming the requested
+    grid vs the available devices (it used to die in a cryptic numpy
+    reshape inside the device slicing), and ``prepare_inputs`` rejects a
+    matrix whose size is not a multiple of the block size with a real
+    ValueError (not an ``assert`` that vanishes under ``python -O``).
+    The main pytest process is single-device, which is exactly the
+    misconfiguration the grid check must catch."""
+    from repro.core import sparse
+    from repro.core.pselinv_dist import prepare_inputs, run_distributed
+
+    A = sparse.laplacian_2d(12, 8)
+    # a grid no host plausibly satisfies, so the check fires regardless
+    # of how many devices this machine (or its XLA_FLAGS) exposes
+    with pytest.raises(ValueError, match=r"grid 64x64 needs 4096 devices"):
+        run_distributed(A, b=8, pr=64, pc=64)
+    with pytest.raises(ValueError, match=r"not a multiple of the supernode"):
+        prepare_inputs(A, b=7, pr=1, pc=1)
 
 
 def test_tree_collectives_match_builtins():

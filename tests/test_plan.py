@@ -25,9 +25,11 @@ from conftest import run_sub
 from repro.core import sparse
 from repro.core.plan import (build_plan, compile_exec, etree_levels,
                              exec_byte_counts, merge_round_lists,
-                             ppermute_round_count, schedule_overlapped)
+                             peak_arena_blocks, ppermute_round_count,
+                             schedule_overlapped)
 from repro.core.schedule import Grid2D
-from repro.core.simulator import volumes, volumes_fast
+from repro.core.simulator import (round_schedule_from_overlap,
+                                  simulate_schedule, volumes, volumes_fast)
 from repro.core.symbolic import BlockStructure, symbolic_factorize
 from repro.core.trees import HYBRID_FLAT_MAX, TreeKind, build_tree
 
@@ -172,22 +174,44 @@ def test_overlapped_fewer_rounds_and_coalescing(lap_bs, pr, pc):
         assert max(lanes.values()) == rnd.width
 
 
-def test_overlapped_u_stacks_complete_at_gemm_boundary():
+@pytest.mark.parametrize("window", [None, 1, 2])
+def test_overlapped_u_stacks_complete_at_read_boundaries(window):
     """Replay only the comm rounds of the overlapped stream (numpy, host
-    side) and check that at every GEMM boundary each participating device
-    holds the exact Û(K,I) = L̂(I,K)ᵀ payload. Regression test for the
-    per-device slot keying: I and I+1 with equal I//pc share a flat Û
-    slot number on different grid columns, and a slot-only dependence key
-    once wired a broadcast's root to the *wrong* xfer-in, shipping zeros
-    (caught at nb=32, grid 4×2, where struct holds consecutive
-    supernodes)."""
+    side) and check that at every GEMM *and* scomp boundary each
+    participating device holds the exact Û(K,I) = L̂(I,K)ᵀ payload —
+    scomp is a level's *last* Û reader, so holding there proves the
+    recycled slots stay intact across the whole liveness window.
+
+    Regression test for two dependence-keying hazards: (a) per-device
+    slot keying — the per-column Û allocators share one address range,
+    so equal slot numbers on different grid columns hold different
+    blocks, and a slot-only key once wired a broadcast's root to the
+    wrong xfer-in, shipping zeros; (b) generation keying — under slot
+    recycling (window=1/2 here) the same (device, slot) hosts several
+    levels' payloads, and a missing WAR anti-dependence would let a new
+    generation's fill clobber a slot its previous tenant still reads."""
     bs = symbolic_factorize(
         sp.csr_matrix(sparse.laplacian_2d(32, 8)), max_supernode=8)
     pr, pc = 4, 2
     plan = build_plan(bs, Grid2D(pr, pc), TreeKind.SHIFTED, nb=32)
-    ov = schedule_overlapped(plan)
+    ov = schedule_overlapped(plan, window=window)
     P, nbr, nbc = pr * pc, ov.nbr, ov.nbc
     N = ov.n_ainv
+
+    if window is not None:
+        # recycling must actually alias slots across generations here
+        owners = {}
+        aliased = 0
+        for L, lv in enumerate(ov.levels):
+            for dev in range(P):
+                for slot in lv.u_gather[dev]:
+                    if slot == ov.trash:
+                        continue
+                    key = (dev, int(slot))
+                    if key in owners and owners[key] != L:
+                        aliased += 1
+                    owners[key] = L
+        assert aliased, "window set but no Û slot was ever recycled"
 
     # distinguishable payload per global block (I, K)
     arena = np.zeros((P, ov.arena_blocks))
@@ -198,24 +222,28 @@ def test_overlapped_u_stacks_complete_at_gemm_boundary():
             arena[dev, ov.lh_base + (I // pr) * nbc + K // pc] = \
                 1000.0 * I + K
 
-    gemm_at = {t: op for t, ops in enumerate(ov.compute_at)
-               for op in ops if op.kind == "gemm"}
+    read_at = {}
+    for t, ops in enumerate(ov.compute_at):
+        for op in ops:
+            if op.kind in ("gemm", "scomp"):
+                read_at.setdefault(t, []).append(op.level)
 
     def check_level(L):
         lv = ov.levels[L]
         for k, K in enumerate(lv.Ks):
             C = [int(x) for x in bs.struct[K]]
             for I in C:
-                slot = lv.base_u + k * nbc + I // pc
                 need = ({(J % pr) * pc + I % pc for J in C}
                         | {(K % pr) * pc + I % pc})
                 for dev in need:
+                    slot = lv.u_gather[dev, k * nbc + I // pc]
+                    assert slot != ov.trash, (L, K, I, dev)
                     assert arena[dev, slot] == 1000.0 * I + K, \
                         (L, K, I, dev)
 
     for t, rnd in enumerate(ov.rounds):
-        if t in gemm_at:
-            check_level(gemm_at[t].level)
+        for L in read_at.get(t, ()):
+            check_level(L)
         if rnd.lwidth:
             snap = arena.copy()
             for dev in range(P):
@@ -232,8 +260,109 @@ def test_overlapped_u_stacks_complete_at_gemm_boundary():
                     arena[dev, rnd.scatter[dev, j]] = (
                         moved[dev, j]
                         + rnd.addm[dev, j] * snap[dev, rnd.scatter[dev, j]])
-    if len(ov.rounds) in gemm_at:
-        check_level(gemm_at[len(ov.rounds)].level)
+    for L in read_at.get(len(ov.rounds), ()):
+        check_level(L)
+
+
+def _u_write_lanes(ov):
+    """Reconstruct every Û-writing lane of the compiled stream as
+    (round, device, arena slot, level). Lane order inside
+    ``GlobalRound.edges`` follows the (pair, lane) nesting of the
+    scheduler, so the lane index recovers the scatter-table column."""
+    out = []
+    for t, rnd in enumerate(ov.rounds):
+        lane_j = {}
+        for (s, d, kind, lv, _nb) in rnd.edges:
+            j = lane_j.get((s, d), 0)
+            lane_j[(s, d)] = j + 1
+            if kind in ("xfer", "col-bcast"):
+                out.append((t, d, int(rnd.scatter[d, j]), lv))
+        lane_j = {}
+        for (dev, kind, lv) in rnd.lmoves:
+            j = lane_j.get(dev, 0)
+            lane_j[dev] = j + 1
+            if kind == "xfer-local":
+                out.append((t, dev, int(rnd.lscatter[dev, j]), lv))
+    return out
+
+
+@pytest.mark.parametrize("window", [None, 1, 2])
+def test_no_live_generations_alias_a_slot(window):
+    """The liveness-window property: whenever two generations (levels)
+    alias the same (device, arena slot), the earlier tenant's *last
+    read* precedes the later tenant's *first write*.
+
+    Û slots: a generation is live from its first fill into the slot to
+    its scomp boundary (boundary t computes before round t's comm, so
+    ``scomp_boundary <= first_write_round`` is exact). Shared partial /
+    S regions: generation L's occupancy [gemm(L), write(L)] /
+    [scomp(L), diagw(L)] must end before generation L+1's begins —
+    compute ops sharing a boundary execute in ``compute_at`` list order,
+    so ties are legal only with the reader listed first."""
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(32, 8)), max_supernode=8)
+    plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=32)
+    ov = schedule_overlapped(plan, window=window)
+    at = {(op.kind, op.level): t for t, ops in enumerate(ov.compute_at)
+          for op in ops}
+    nlev = len(ov.levels)
+
+    # ---- Û pool: per (device, slot), generations must not overlap ----
+    writes = {}
+    for (t, dev, slot, lv) in _u_write_lanes(ov):
+        writes.setdefault((dev, slot), {}).setdefault(lv, []).append(t)
+    aliased = 0
+    for (dev, slot), gens in writes.items():
+        order = sorted(gens)
+        aliased += len(order) - 1
+        for la, lb in zip(order, order[1:]):
+            last_read = at[("scomp", la)]
+            first_write = min(gens[lb])
+            assert last_read <= first_write, \
+                (dev, slot, la, lb, last_read, first_write)
+    if window is not None:
+        assert aliased, "window set but no Û slot hosted two generations"
+
+    # ---- shared partial / S regions: generations ordered in time -----
+    def _ordered(reader, writer, L):
+        tr, tw = at[(reader, L)], at[(writer, L + 1)]
+        assert tr <= tw, (reader, writer, L, tr, tw)
+        if tr == tw:
+            ops = ov.compute_at[tr]
+            ir = ops.index(next(o for o in ops
+                                if o.kind == reader and o.level == L))
+            iw = ops.index(next(o for o in ops
+                                if o.kind == writer and o.level == L + 1))
+            assert ir < iw, (reader, writer, L)
+
+    for L in range(nlev - 1):
+        _ordered("write", "gemm", L)     # partial region: last read vs
+        _ordered("diagw", "scomp", L)    # next write; same for S region
+
+
+@pytest.mark.parametrize("nx,max_rounds", [(16, 28), (32, 34)])
+def test_recycled_arena_peak_and_rounds(nx, max_rounds):
+    """The acceptance envelope of the arena recycling: at grid 4×2 the
+    overlapped executor's peak footprint (arena + the resident input L̂
+    shard it copies) stays within 1.5× of the level-serial executor's
+    transient peak — it lands at ~1.2×; the pre-recycling arena peaked
+    at ~3× at nb=32 — while the ppermute round counts hold the
+    coalesced-overlap wins (28 @ nb=16, 34 @ nb=32), and the schedule
+    simulator carries the peak so the bench trajectory can
+    regression-guard it."""
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(nx, 8)), max_supernode=8)
+    plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=nx)
+    ex = compile_exec(plan)
+    ov = schedule_overlapped(plan)
+    assert ppermute_round_count(ov) <= max_rounds
+    assert peak_arena_blocks(ov) <= 1.5 * peak_arena_blocks(ex)
+    sim = simulate_schedule(round_schedule_from_overlap(ov, plan))
+    assert sim.peak_arena_blocks == peak_arena_blocks(ov)
+    # a tighter window trades rounds for an even smaller arena but must
+    # never lose correctness or the memory bound
+    ov1 = schedule_overlapped(plan, window=1)
+    assert peak_arena_blocks(ov1) <= peak_arena_blocks(ov)
 
 
 def _dense_chain_bs(ns: int, w: int = 1) -> BlockStructure:
@@ -371,3 +500,60 @@ def test_ir_sweep_matches_oracle_multi_grid():
             assert err < 1e-9, (pr, pc, kind, err)
         print("OK")
     """, x64=True)
+
+
+def test_overlapped_recycled_matches_serial_nb32():
+    """End-to-end oracle under *forced* Û slot reuse: nb=32 on grid 4×2
+    with window=1 (every level recycles the previous level's compact Û
+    slots, plus the always-shared partial/S regions) must match the
+    level-serial executor bit-tight (≤1e-12 in f64) and the dense
+    inverse on the selected pattern — the executed proof that the
+    generation anti-dependences make aliasing safe, not just the host
+    replay."""
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import sparse
+        from repro.core.trees import TreeKind
+        from repro.core.pselinv_dist import (build_program, make_sweep,
+                                             make_sweep_overlapped,
+                                             prepare_inputs, gather_blocks,
+                                             run_distributed)
+        from repro.core.selinv import dense_selinv_oracle
+        A = sparse.laplacian_2d(32, 8)
+        b, pr, pc = 8, 4, 2
+        bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
+        devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
+        mesh = Mesh(devs, ("xy",))
+        Lh = jnp.asarray(Lh_s, jnp.float64)
+        Dinv = jnp.asarray(Dinv_s, jnp.float64)
+
+        def run(prog, mk):
+            fn = jax.jit(shard_map(mk(prog), mesh=mesh,
+                                   in_specs=(P("xy"), P("xy")),
+                                   out_specs=P("xy")))
+            return np.asarray(fn(Lh, Dinv))
+
+        prog_s = build_program(bs, nb, b, pr, pc, TreeKind.SHIFTED)
+        out_s = run(prog_s, make_sweep)
+        prog_w = build_program(bs, nb, b, pr, pc, TreeKind.SHIFTED,
+                               overlap=True, window=1)
+        assert prog_w.overlap_plan.arena_blocks < 400  # recycled arena
+        out_w = run(prog_w, make_sweep_overlapped)
+        assert abs(out_w - out_s).max() < 1e-12, abs(out_w - out_s).max()
+
+        ref = dense_selinv_oracle(A)
+        blocks = gather_blocks(out_w, prog_w)
+        err = 0.0
+        for K in range(bs.nsuper):
+            err = max(err, abs(blocks[K, K]
+                               - ref[K*8:(K+1)*8, K*8:(K+1)*8]).max())
+            for I in bs.struct[K]:
+                I = int(I)
+                err = max(err, abs(blocks[I, K]
+                                   - ref[I*8:(I+1)*8, K*8:(K+1)*8]).max())
+        assert err < 1e-9, err
+        print("OK")
+    """, x64=True, timeout=600)

@@ -1,6 +1,8 @@
 #!/usr/bin/env python
-"""Append this checkout's benchmark rows to the machine-readable perf
-trajectory at the repo root (``BENCH_pselinv.json``).
+"""Record this checkout's benchmark rows in the machine-readable perf
+trajectory at the repo root (``BENCH_pselinv.json``). Idempotent per
+``--rev``: re-running replaces that rev's entry in place (a repeated
+verify run no longer stacks duplicate trajectory rows).
 
 Part of the verify flow (see ``.claude/skills/verify/SKILL.md``): run
 once per PR so every change lands a ``us_per_call`` row per bench and
@@ -74,12 +76,22 @@ def main() -> None:
         with open(args.out) as f:
             hist = json.load(f)
     rev = args.rev or git_rev()
-    hist.append({"rev": rev, "benches": session["benches"],
-                 "failed": session["failed"]})
+    entry = {"rev": rev, "benches": session["benches"],
+             "failed": session["failed"]}
+    # idempotent verify flow: re-running with the same --rev replaces
+    # that rev's entry in place instead of stacking duplicate rows
+    for i, h in enumerate(hist):
+        if h.get("rev") == rev:
+            hist[i] = entry
+            action = f"replaced rev {rev}"
+            break
+    else:
+        hist.append(entry)
+        action = f"appended rev {rev}"
     with open(args.out, "w") as f:
         json.dump(hist, f, indent=1)
         f.write("\n")
-    print(f"[bench] appended rev {rev} ({len(session['benches'])} rows) to "
+    print(f"[bench] {action} ({len(session['benches'])} rows) in "
           f"{os.path.relpath(args.out, ROOT)}; history={len(hist)} entries")
     if r.returncode:
         raise SystemExit(r.returncode)   # recorded, but still a failure
