@@ -1,0 +1,68 @@
+"""Analyze-once / solve-many with the PSelInvEngine session API.
+
+One symbolic analysis (trees, rounds, tables, jitted sweep) serves an
+entire stream of matrices that share a sparsity structure — the serving
+pattern the engine exists for. Values move; structure doesn't.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python examples/pselinv_engine.py
+"""
+import time
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import sparse
+from repro.core.engine import Grid, PlanOptions, PSelInvEngine
+from repro.core.pselinv_dist import gather_blocks
+from repro.core.selinv import dense_selinv_oracle
+
+
+def main():
+    A = sparse.laplacian_2d(16, 8)
+
+    # 1. analyze ONCE: symbolic factorization -> CommPlan IR ->
+    #    overlapped round schedule -> per-device tables -> jitted sweep.
+    #    The session is cached on (structure, b, grid, options).
+    t0 = time.perf_counter()
+    engine = PSelInvEngine.analyze(
+        A, b=8, grid=Grid(4, 2),
+        options=PlanOptions(overlap=True, coalesce_max=8))
+    stats = engine.stats()
+    print(f"analyze: {time.perf_counter() - t0:.2f}s  "
+          f"rounds={stats['ppermute_rounds']} "
+          f"peak_arena_blocks={stats['peak_arena_blocks']}")
+
+    # a second analyze of the same structure is a cache hit — same
+    # engine object, nothing recompiled
+    again = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                  options=PlanOptions(overlap=True,
+                                                      coalesce_max=8))
+    print(f"re-analyze is cached: {again is engine} "
+          f"(hits={PSelInvEngine.cache_hits})")
+
+    # 2. solve MANY: same structure, different values — one batched
+    #    vmapped sweep call, no per-matrix retrace or recompile.
+    mats = [A + sp.identity(A.shape[0]) * c for c in (0.0, 0.5, 1.0, 2.0)]
+    t0 = time.perf_counter()
+    outs = np.asarray(engine.solve_many(mats))        # (B, P, ...)
+    print(f"solve_many(B={len(mats)}): {time.perf_counter() - t0:.2f}s  "
+          f"out shape {outs.shape}  traces={engine.trace_count}")
+
+    # 3. each batch member is a real selected inverse
+    for i, M in enumerate(mats):
+        ref = dense_selinv_oracle(M)
+        blocks = gather_blocks(outs[i], engine)
+        K = 0
+        err = abs(blocks[K, K] - ref[:8, :8]).max()
+        print(f"  matrix {i}: |A^-1(0,0) - oracle| = {err:.2e}")
+
+    # 4. the cached plan also answers timing questions without
+    #    re-lowering anything
+    sim = engine.simulate()
+    print(f"simulated sweep time: {sim.total_time * 1e6:.1f} us "
+          f"(comm/comp = {sim.comm_to_comp_ratio():.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ from .symbolic import BlockStructure, symbolic_factorize, partition_supernodes
 from .supernodal_lu import LUFactors, factorize, dense_lu_nopivot
 from .selinv import (selinv, selected_inverse, dense_selinv_oracle,
                      compare_with_oracle)
+from .engine import Grid, PlanOptions, PSelInvEngine, SolveValues
 
 __all__ = [
     "CommTree", "TreeKind", "build_tree", "flat_tree", "binary_tree",
@@ -13,4 +14,5 @@ __all__ = [
     "BlockStructure", "symbolic_factorize", "partition_supernodes",
     "LUFactors", "factorize", "dense_lu_nopivot",
     "selinv", "selected_inverse", "dense_selinv_oracle", "compare_with_oracle",
+    "Grid", "PlanOptions", "PSelInvEngine", "SolveValues",
 ]

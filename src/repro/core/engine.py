@@ -1,0 +1,270 @@
+"""PSelInvEngine — the analyze/plan/bind/solve session API.
+
+The paper's central observation is that the *structure* of the
+restricted collectives (trees, rounds, tables) is fully known before a
+single value moves. Production selected-inversion libraries split their
+API exactly there (PSelInv's ``SymbolicFactorize``/``NumericalSelInv``,
+Serinv's symbolic setup vs repeated numeric solves); this module is that
+split for the JAX reproduction:
+
+    engine = PSelInvEngine.analyze(A_or_structure, b=8,
+                                   grid=Grid(4, 2),
+                                   options=PlanOptions(...))
+    out = engine.solve(values)            # value-only hot path
+
+``analyze`` performs symbolic analysis → CommPlan IR → (overlapped)
+round schedule → per-device gather/scatter tables → the jitted
+shard_map sweep **once**, and caches the whole session keyed on
+(block-structure hash, supernode width, grid, :class:`PlanOptions`) —
+a second ``analyze`` with an identical structure returns the *same*
+engine, compiled program included. ``solve`` moves values only: the
+host numeric factorization (when given a matrix) plus one call of the
+cached jitted sweep — no symbolic work, no re-lowering, no retrace.
+
+**Multi-matrix batching** comes from the same structure/value split:
+the compiled tables are value-independent, so ``solve`` accepts a
+leading batch axis (``values`` shaped (B, P, nbr, nbc, b, b)) and runs
+all B matrices through one ``vmap``-ed sweep — one trace, one compile,
+B results (``solve_many`` stacks a list of matrices for you). This is
+the ROADMAP's "many matrices, same structure" serving path.
+
+``run_distributed``/``prepare_inputs`` in ``pselinv_dist`` remain as
+thin back-compat shims over this engine.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import ClassVar, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..compat import shard_map
+from .plan import (PlanOptions, peak_arena_blocks, ppermute_round_count)
+from .pselinv_dist import (PSelInvProgram, analyze_structure, build_program,
+                           check_grid_devices, make_sweep,
+                           make_sweep_overlapped, pad_nb, prepare_values,
+                           validate_uniform_widths)
+from .schedule import Grid2D
+from .symbolic import BlockStructure
+
+__all__ = ["Grid", "PlanOptions", "PSelInvEngine", "SolveValues",
+           "structure_key", "stack_values"]
+
+#: the session API's name for the 2-D process grid (one definition —
+#: ``schedule.Grid2D`` — reused, not duplicated)
+Grid = Grid2D
+
+
+class SolveValues(NamedTuple):
+    """One matrix's numeric payload in device layout: ``Lh`` and ``Dinv``
+    shaped (P, nbr, nbc, b, b) — or (B, P, nbr, nbc, b, b) with a
+    leading batch axis for multi-matrix solves."""
+    Lh: np.ndarray
+    Dinv: np.ndarray
+
+
+def stack_values(values: Sequence[SolveValues]) -> SolveValues:
+    """Stack per-matrix :class:`SolveValues` along a new leading batch
+    axis (same structure, many matrices)."""
+    return SolveValues(np.stack([v.Lh for v in values]),
+                       np.stack([v.Dinv for v in values]))
+
+
+def structure_key(bs: BlockStructure) -> str:
+    """Content hash of a block structure — the value-independent part of
+    the engine cache key. Two matrices with equal sparsity structure
+    (same supernodes, same fill, same etree) hash equal and share one
+    compiled session."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(bs.offsets, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(bs.parent, dtype=np.int64).tobytes())
+    for s in bs.struct:
+        h.update(np.ascontiguousarray(s, dtype=np.int64).tobytes())
+        h.update(b"|")
+    return h.hexdigest()
+
+
+def _is_matrix(x) -> bool:
+    """A numeric matrix (dense 2-D array or scipy sparse) as opposed to
+    prepared value shards."""
+    try:
+        import scipy.sparse as sp
+        if sp.issparse(x):
+            return True
+    except ImportError:                       # pragma: no cover
+        pass
+    return hasattr(x, "ndim") and getattr(x, "ndim", 0) == 2
+
+
+@dataclass
+class PSelInvEngine:
+    """One compiled selected-inversion session: structure + grid +
+    options bound to a jitted sweep. Construct through
+    :meth:`analyze` — the constructor itself performs no work."""
+    bs: BlockStructure
+    b: int
+    nb: int
+    grid: Grid2D
+    options: PlanOptions
+    program: PSelInvProgram
+    mesh: object
+    key: Tuple = ()
+    #: times the jitted sweep body was (re)traced — regression handle for
+    #: the "solve does not retrace" contract
+    trace_count: int = 0
+    solve_calls: int = 0
+    _fns: Dict[bool, object] = field(default_factory=dict)
+    _jit_lock: threading.Lock = field(default_factory=threading.Lock,
+                                      repr=False)
+    _round_schedule: Optional[object] = None
+
+    # ---- the structure cache (class-level, all sessions) --------------
+    _cache: ClassVar[Dict[Tuple, "PSelInvEngine"]] = {}
+    _cache_lock: ClassVar[threading.Lock] = threading.Lock()
+    #: FIFO eviction bound — a long-lived server analyzing a stream of
+    #: distinct structures must not pin every session's tables and
+    #: compiled executables for process lifetime (raise it for workloads
+    #: that legitimately juggle more concurrent structures)
+    cache_max: ClassVar[int] = 16
+    cache_hits: ClassVar[int] = 0
+    cache_misses: ClassVar[int] = 0
+
+    @classmethod
+    def analyze(cls, structure_or_A, b: int, grid: Grid2D,
+                options: PlanOptions = PlanOptions()) -> "PSelInvEngine":
+        """Symbolic analysis → CommPlan → schedule → tables → jitted
+        sweep, **once per structure**. Accepts a matrix (symbolically
+        factorized here) or a ready :class:`BlockStructure`; returns the
+        cached engine when an identical (structure, b, grid, options)
+        session already exists."""
+        check_grid_devices(grid.pr, grid.pc)
+        if isinstance(structure_or_A, BlockStructure):
+            bs = structure_or_A
+            validate_uniform_widths(bs, b)
+            nb = pad_nb(bs.nsuper, grid.pr, grid.pc)
+        else:
+            bs, nb = analyze_structure(structure_or_A, b, grid.pr, grid.pc)
+
+        key = (structure_key(bs), b, grid, options)
+        with cls._cache_lock:
+            hit = cls._cache.get(key)
+            if hit is not None:
+                cls.cache_hits += 1
+                return hit
+            cls.cache_misses += 1
+
+        from jax.sharding import Mesh
+        program = build_program(bs, nb, b, grid.pr, grid.pc,
+                                options=options)
+        devs = np.array(jax.devices()[:grid.size]).reshape(grid.size)
+        engine = cls(bs=bs, b=b, nb=nb, grid=grid, options=options,
+                     program=program, mesh=Mesh(devs, ("xy",)), key=key)
+        with cls._cache_lock:
+            # somebody may have raced us past the miss above; keep the
+            # first published session so `analyze` stays idempotent
+            engine = cls._cache.setdefault(key, engine)
+            while len(cls._cache) > cls.cache_max:    # FIFO eviction
+                cls._cache.pop(next(iter(cls._cache)))
+        return engine
+
+    @classmethod
+    def clear_cache(cls) -> None:
+        with cls._cache_lock:
+            cls._cache.clear()
+            cls.cache_hits = cls.cache_misses = 0
+
+    # ---- lowering / jit (once per (batched, dtype) shape class) -------
+    def jitted(self, batched: bool = False):
+        """The compiled shard_map sweep as a ``jax.jit`` callable.
+        Single-matrix signature: (Lh, Dinv) each (P, nbr, nbc, b, b),
+        sharded over mesh axis "xy". Batched: (B, P, nbr, nbc, b, b) —
+        the leading axis is vmapped through the value tensors while the
+        static tables are shared (no per-item retrace)."""
+        with self._jit_lock:     # cached sessions are shared: one
+            fn = self._fns.get(batched)      # builder per shape class
+            if fn is None:
+                from jax.sharding import PartitionSpec as P
+                mk = (make_sweep_overlapped if self.options.overlap
+                      else make_sweep)
+                sweep = mk(self.program, batched=batched)
+
+                def counted(Lh, Dinv):
+                    self.trace_count += 1     # fires at trace time only
+                    return sweep(Lh, Dinv)
+
+                spec = P(None, "xy") if batched else P("xy")
+                fn = jax.jit(shard_map(counted, mesh=self.mesh,
+                                       in_specs=(spec, spec),
+                                       out_specs=spec))
+                self._fns[batched] = fn
+        return fn
+
+    # ---- the value-only hot path --------------------------------------
+    def prepare_values(self, A, dtype=None) -> SolveValues:
+        """Numeric host factorization of one matrix against the cached
+        structure → device-layout shards. No symbolic work."""
+        Lh, Dinv = prepare_values(A, self.bs, self.nb, self.b,
+                                  self.grid.pr, self.grid.pc)
+        if dtype is not None:
+            Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        return SolveValues(Lh, Dinv)
+
+    def solve(self, values, dtype=jnp.float32):
+        """Selected inversion of one matrix — or a whole batch.
+
+        ``values`` is a matrix (numeric-factorized here against the
+        cached structure), a :class:`SolveValues`, or a plain
+        ``(Lh, Dinv)`` pair. Arrays of rank 5 ((P, nbr, nbc, b, b))
+        solve one matrix; rank 6 ((B, P, nbr, nbc, b, b), the leading
+        **batch axis**) solve B same-structure matrices through one
+        vmapped sweep call. Returns the A⁻¹ shards in the same layout
+        (rank 5 or 6). ``dtype`` casts the values (f32 default,
+        matching ``run_distributed``); pass ``None`` to keep the
+        arrays' own dtype."""
+        if _is_matrix(values):
+            values = self.prepare_values(values)
+        Lh, Dinv = values
+        if dtype is not None:
+            Lh = jnp.asarray(Lh, dtype=dtype)
+            Dinv = jnp.asarray(Dinv, dtype=dtype)
+        if Lh.ndim not in (5, 6):
+            raise ValueError(
+                f"values must be rank 5 (single) or rank 6 (leading "
+                f"batch axis), got shape {Lh.shape}")
+        self.solve_calls += 1
+        return self.jitted(batched=(Lh.ndim == 6))(Lh, Dinv)
+
+    def solve_many(self, mats: Sequence, dtype=jnp.float32):
+        """Convenience: numeric-factorize each same-structure matrix,
+        stack along the batch axis, and run ONE batched solve."""
+        vals = stack_values([self.prepare_values(A) for A in mats])
+        return self.solve(vals, dtype=dtype)
+
+    # ---- plan introspection (no re-lowering) --------------------------
+    def round_schedule(self):
+        """The cached program's executed :class:`~.simulator.RoundSchedule`
+        (built once, then reused — nothing is re-lowered)."""
+        if self._round_schedule is None:
+            from .simulator import round_schedule_of
+            self._round_schedule = round_schedule_of(self.program)
+        return self._round_schedule
+
+    def simulate(self, model=None):
+        """α-β timing of the cached compiled schedule
+        (:func:`~.simulator.simulate_schedule` on :meth:`round_schedule`
+        — replaces the hand-wired ``round_schedule_from_*`` plumbing)."""
+        from .simulator import simulate_schedule
+        return simulate_schedule(self.round_schedule(), model)
+
+    def stats(self) -> Dict[str, int]:
+        """Static schedule metrics of the cached program: ppermute round
+        count and peak per-device arena footprint (blocks)."""
+        ex = (self.program.overlap_plan if self.options.overlap
+              else self.program.exec_plan)
+        return {"ppermute_rounds": ppermute_round_count(ex),
+                "peak_arena_blocks": peak_arena_blocks(ex)}

@@ -77,13 +77,38 @@ from .symbolic import BlockStructure
 from .trees import CommTree, TreeKind, build_tree, cached_tree, stable_hash
 
 __all__ = [
-    "PlanOp", "CommPlan", "build_plan", "tree_for", "merge_round_lists",
+    "PlanOptions", "PlanOp", "CommPlan", "build_plan", "tree_for",
+    "merge_round_lists",
     "pack_edges", "CommRound", "LocalRound", "LevelExec", "ExecPlan",
     "compile_exec", "exec_byte_counts", "etree_levels",
     "GlobalRound", "ComputeOp", "OverlapLevel", "OverlappedExec",
     "schedule_overlapped", "overlapped_byte_counts", "ppermute_round_count",
     "peak_arena_blocks",
 ]
+
+
+@dataclass(frozen=True)
+class PlanOptions:
+    """The one knob bundle every schedule consumer reads.
+
+    Collects what used to be scattered keyword arguments (``kind``,
+    ``overlap``, ``coalesce_max``, ``window``) across ``build_program``,
+    ``run_distributed``, :func:`schedule_overlapped` and the bench into a
+    single hashable value — it is part of the
+    :class:`~.engine.PSelInvEngine` structure-cache key, so two sessions
+    with equal structure but different options compile independently.
+
+    ``kind``: the tree family every restricted collective lowers through
+    (:func:`tree_for`). ``overlap``: compile the cross-level overlapped
+    round stream (the default executor) instead of the level-serial A/B
+    baseline. ``coalesce_max``: max blocks one (src, dst) pair may carry
+    as lanes of a single ppermute. ``window``: Û pool liveness window in
+    adjacent elimination-tree levels (``None`` = whole sweep resident;
+    see :func:`schedule_overlapped`)."""
+    kind: TreeKind = TreeKind.SHIFTED
+    overlap: bool = True
+    coalesce_max: int = 8
+    window: int | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -590,6 +615,8 @@ class _Item:
     nbytes: float = 0.0
     local: bool = False
     compute: str = ""              # "gemm" | "write" | "scomp" | "diagw"
+    from_lh: bool = False          # gather from the input L̂ shard, not
+                                   # the arena (xfer-in lanes only)
 
 
 @dataclass
@@ -602,8 +629,11 @@ class GlobalRound:
     Per-device tables (all (P, width)): ``gather``/``scatter`` flat arena
     slots, ``addm`` 1.0 where the lane accumulates (reductions) instead of
     overwriting, ``tmask`` True where the receiver transposes the lane
-    (the L̂→Û and A⁻¹ symmetric handoffs). ``lgather``/``lscatter``/
-    ``ltmask`` ((P, lwidth)) are owner-local copies executed before the
+    (the L̂→Û and A⁻¹ symmetric handoffs), ``glh`` True where the sender
+    gathers from the resident input L̂ shard instead of the arena (the
+    xfer-in lanes; the arena holds no L̂ copy — the lane's gather index
+    is then a flat [0, N) L̂ slot). ``lgather``/``lscatter``/``ltmask``/
+    ``lglh`` ((P, lwidth)) are owner-local copies executed before the
     permute. ``edges`` keeps (src, dst, kind, level, nbytes) per lane for
     byte accounting and the dependence-property tests."""
     perm: List[Tuple[int, int]]
@@ -613,10 +643,12 @@ class GlobalRound:
     addm: np.ndarray
     tmask: np.ndarray
     edges: List[Tuple[int, int, str, int, float]]
+    glh: np.ndarray | None = None
     lwidth: int = 0
     lgather: np.ndarray | None = None
     lscatter: np.ndarray | None = None
     ltmask: np.ndarray | None = None
+    lglh: np.ndarray | None = None
     lmoves: List[Tuple[int, str, int]] = field(default_factory=list)
 
 
@@ -660,20 +692,22 @@ class OverlappedExec:
     ppermute rounds spanning every elimination-tree level, plus the
     compute ops pinned to round boundaries (``compute_at[t]`` runs before
     round ``t``; the final entry after the last round). The arena is one
-    flat per-device block buffer: [0, n_ainv) A⁻¹, [lh_base, lh_base +
-    n_ainv) the read-only L̂ shard, then the compact recycled Û slot
-    pool (:func:`_u_pool_layout`), then **one** shared partial region
-    and one shared S region that every elimination-tree level aliases
-    (their liveness never spans two levels), with the shared trash block
-    last. Generations that alias the same physical slots are separated
-    in time by the scheduler's generation-keyed anti-dependences (see
-    :func:`_overlap_items`), so the arena footprint no longer grows with
-    the number of levels."""
+    flat per-device block buffer: [0, n_ainv) A⁻¹, then the compact
+    recycled Û slot pool (:func:`_u_pool_layout`), then **one** shared
+    partial region and one shared S region that every elimination-tree
+    level aliases (their liveness never spans two levels), with the
+    shared trash block last. The read-only input L̂ shard is **not**
+    copied in: xfer-in lanes gather straight from it through the
+    per-lane ``glh``/``lglh`` masks of :class:`GlobalRound`, which
+    shaves ``n_ainv`` blocks off the footprint and puts the overlapped
+    peak *below* the level-serial executor's. Generations that alias
+    the same physical slots are separated in time by the scheduler's
+    generation-keyed anti-dependences (see :func:`_overlap_items`), so
+    the arena footprint no longer grows with the number of levels."""
     nb: int
     pr: int
     pc: int
     n_ainv: int
-    lh_base: int
     arena_blocks: int              # trash included
     trash: int
     diag_set_root: np.ndarray
@@ -756,17 +790,17 @@ def peak_arena_blocks(ex: "ExecPlan | OverlappedExec") -> int:
     Level-serial: A⁻¹ (N + 1 trash) + the input L̂ shard (N, read in
     place) + the largest level's transient Û/partial/S stacks (one
     trash block each, freed at the level barrier). Overlapped: the flat
-    arena (A⁻¹ + an arena *copy* of L̂ + the compact recycled Û pool +
-    the shared partial/S regions + trash, :class:`OverlappedExec`)
-    **plus** the resident input L̂ shard itself — the executor copies L̂
-    into the arena so rounds can gather from one buffer, and the input
-    stays live for the whole call, so both copies count. The read-only
-    D⁻¹ shard (N blocks) is input-resident in both paths and excluded,
-    so the two numbers compare like for like; before slot recycling the
-    overlapped arena dense-stacked *every* level's Û/partial/S and
-    peaked at ~3× the serial path at nb=32 (now ~1.2×; gathering
-    xfer-in straight from the input shard would shave the copy's N
-    blocks — ROADMAP open item)."""
+    arena (A⁻¹ + the compact recycled Û pool + the shared partial/S
+    regions + trash, :class:`OverlappedExec`) **plus** the resident
+    input L̂ shard — xfer-in lanes gather straight from the input
+    through the per-lane ``glh`` masks, so the arena holds no L̂ copy
+    and only the input's N blocks count. The read-only D⁻¹ shard
+    (N blocks) is input-resident in both paths and excluded, so the two
+    numbers compare like for like; before slot recycling the overlapped
+    arena dense-stacked *every* level's Û/partial/S and peaked at ~3×
+    the serial path at nb=32, compaction brought it to ~1.2×, and
+    dropping the arena L̂ copy lands it *below* the serial peak
+    (~0.9×, asserted in the bench and tests)."""
     N = ex.nbr * ex.nbc
     if isinstance(ex, OverlappedExec):
         return ex.arena_blocks + N
@@ -855,10 +889,10 @@ def _u_pool_layout(plan: CommPlan, window: int | None
 
 def _overlap_items(plan: CommPlan, window: int | None = None
                    ) -> Tuple[List[_Item], List[OverlapLevel],
-                              int, int, int]:
+                              int, int]:
     """Lower the CommPlan into the overlapped item DAG.
 
-    Returns (items, level metadata, n_ainv, lh_base, arena_blocks).
+    Returns (items, level metadata, n_ainv, arena_blocks).
     Dependence model — RAW *and* WAR hazards on the arena are encoded as
     deps; reductions accumulate through dep-ordered adds:
 
@@ -914,12 +948,13 @@ def _overlap_items(plan: CommPlan, window: int | None = None
     bs = plan.bs
     by_sn = plan.ops_by_supernode()
     N = nbr * nbc
-    lh_base = N
 
-    # ---- arena layout: compact recycled Û pool + one shared partial
-    # region + one shared S region (single-generation liveness) ---------
+    # ---- arena layout: A⁻¹, then the compact recycled Û pool + one
+    # shared partial region + one shared S region (single-generation
+    # liveness). No L̂ region: xfer-in lanes gather from the resident
+    # input shard directly (``from_lh`` → the executor's glh masks) ----
     u_pool, u_size = _u_pool_layout(plan, window)
-    u_base = 2 * N
+    u_base = N
     base_p = u_base + u_size
     base_s = base_p + max((len(Ks) * nbr for Ks in plan.sweep_levels),
                           default=0)
@@ -988,7 +1023,7 @@ def _overlap_items(plan: CommPlan, window: int | None = None
                         prio=(L, _PH_XI, len(items)), deps=war,
                         local=True,
                         src=grid.owner(I, K), dst=grid.owner(I, K),
-                        gslot=lh_base + (I // pr) * nbc + K // pc,
+                        gslot=(I // pr) * nbc + K // pc, from_lh=True,
                         dslot=slot, transpose=True, kind="xfer-local",
                         level=L))
                     u_filler[(grid.owner(K, I), slot, L)] = i
@@ -1003,7 +1038,7 @@ def _overlap_items(plan: CommPlan, window: int | None = None
                     u_filler[(dst, slot, L)] = i = _add(_Item(
                         prio=(L, _PH_XI, len(items)), deps=war,
                         src=op.root, dst=dst,
-                        gslot=lh_base + (I // pr) * nbc + K // pc,
+                        gslot=(I // pr) * nbc + K // pc, from_lh=True,
                         dslot=slot, transpose=True, kind="xfer",
                         level=L, nbytes=op.nbytes))
                     xi_bc_ids.append(i)
@@ -1130,12 +1165,17 @@ def _overlap_items(plan: CommPlan, window: int | None = None
             Ks=np.asarray(Ks, dtype=np.int64),
             u_gather=u_gather, base_p=base_p, base_s=base_s, **tabs))
 
-    return items, levels, N, lh_base, arena_blocks
+    return items, levels, N, arena_blocks
 
 
 def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
-                        window: int | None = None) -> OverlappedExec:
+                        window: int | None = None, *,
+                        options: PlanOptions | None = None
+                        ) -> OverlappedExec:
     """Compile the IR into the cross-level overlapped executable form.
+    ``options`` (a :class:`PlanOptions`) overrides the loose
+    ``coalesce_max``/``window`` kwargs when given — the engine/session
+    path passes the whole bundle through.
 
     List-schedules the item DAG of :func:`_overlap_items` into one global
     round sequence: an edge fires as soon as its dependences have fired
@@ -1162,14 +1202,15 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
     ppermute rounds: delayed fills contend with the critical-path tree
     traffic for permute slots) for arena blocks. The default ``None``
     keeps every level's compact Û slots resident, which preserves the
-    unthrottled round count while the compaction + partial/S recycling
-    already hold the peak footprint to ~1.2× the level-serial
-    executor's (:func:`peak_arena_blocks`, asserted ≤1.5× in the
-    bench)."""
+    unthrottled round count while compaction + partial/S recycling + the
+    copy-free L̂ gathers hold the peak footprint *below* the
+    level-serial executor's (~0.9×; :func:`peak_arena_blocks`, asserted
+    ≤1.1× in the bench and strictly below serial in the tests)."""
+    if options is not None:
+        coalesce_max, window = options.coalesce_max, options.window
     grid = plan.grid
     P = grid.size
-    items, levels, N, lh_base, arena_blocks = _overlap_items(
-        plan, window=window)
+    items, levels, N, arena_blocks = _overlap_items(plan, window=window)
     trash = arena_blocks - 1
 
     droot = np.array([grid.owner(K, K) for K in plan.diag_only], np.int32)
@@ -1239,6 +1280,7 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
         scatter = np.full((P, max(width, 1)), trash, np.int32)
         addm = np.zeros((P, max(width, 1)), np.float32)
         tmask = np.zeros((P, max(width, 1)), bool)
+        glh = np.zeros((P, max(width, 1)), bool)
         edges: List[Tuple[int, int, str, int, float]] = []
         perm = []
         for (s, d), lane_ids in pair_lanes.items():
@@ -1246,6 +1288,7 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
             for j, i in enumerate(lane_ids):
                 it = items[i]
                 gather[s, j] = it.gslot
+                glh[s, j] = it.from_lh
                 scatter[d, j] = it.dslot
                 addm[d, j] = 1.0 if it.add else 0.0
                 tmask[d, j] = it.transpose
@@ -1254,16 +1297,18 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
                 remaining.discard(i)
 
         lwidth = max((len(v) for v in local_lanes.values()), default=0)
-        lg = ls = lt = None
+        lg = ls = lt = llh = None
         lmoves: List[Tuple[int, str, int]] = []
         if lwidth:
             lg = np.zeros((P, lwidth), np.int32)
             ls = np.full((P, lwidth), trash, np.int32)
             lt = np.zeros((P, lwidth), bool)
+            llh = np.zeros((P, lwidth), bool)
             for dev, lane_ids in local_lanes.items():
                 for j, i in enumerate(lane_ids):
                     it = items[i]
                     lg[dev, j] = it.gslot
+                    llh[dev, j] = it.from_lh
                     ls[dev, j] = it.dslot
                     lt[dev, j] = it.transpose
                     lmoves.append((dev, it.kind, it.level))
@@ -1291,13 +1336,14 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
             gather=gather[:, :max(width, 1)],
             scatter=scatter[:, :max(width, 1)],
             addm=addm[:, :max(width, 1)], tmask=tmask[:, :max(width, 1)],
+            glh=glh[:, :max(width, 1)],
             edges=edges, lwidth=lwidth, lgather=lg, lscatter=ls,
-            ltmask=lt, lmoves=lmoves))
+            ltmask=lt, lglh=llh, lmoves=lmoves))
         compute_at.append([])
         t += 1
 
     return OverlappedExec(
-        nb=plan.nb, pr=grid.pr, pc=grid.pc, n_ainv=N, lh_base=lh_base,
+        nb=plan.nb, pr=grid.pr, pc=grid.pc, n_ainv=N,
         arena_blocks=arena_blocks, trash=trash,
         diag_set_root=droot, diag_set_slot=dslot,
         levels=levels, rounds=rounds, compute_at=compute_at, window=window)

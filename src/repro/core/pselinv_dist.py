@@ -49,7 +49,7 @@ from jax import lax
 from ..compat import shard_map
 from ..kernels.ops import pselinv_level_gemm, pselinv_round_gemm
 from .plan import (CommPlan, CommRound, ExecPlan, LocalRound,
-                   OverlappedExec, build_plan, compile_exec,
+                   OverlappedExec, PlanOptions, build_plan, compile_exec,
                    merge_round_lists, schedule_overlapped)
 from .symbolic import BlockStructure, symbolic_factorize
 from .supernodal_lu import factorize
@@ -58,7 +58,8 @@ from .trees import CommTree, TreeKind, build_tree, stable_hash
 
 __all__ = ["PSelInvProgram", "build_program", "build_program_unrolled",
            "make_sweep", "make_sweep_overlapped", "make_sweep_unrolled",
-           "prepare_inputs", "run_distributed", "gather_blocks"]
+           "analyze_structure", "prepare_values", "prepare_inputs",
+           "run_distributed", "gather_blocks"]
 
 
 @dataclass
@@ -93,8 +94,14 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
                   kind: TreeKind = TreeKind.SHIFTED,
                   overlap: bool = False,
                   coalesce_max: int = 8,
-                  window: int | None = None) -> PSelInvProgram:
+                  window: int | None = None, *,
+                  options: PlanOptions | None = None) -> PSelInvProgram:
     """Build the CommPlan IR and compile it to executable tables.
+
+    ``options`` (a :class:`~.plan.PlanOptions`) bundles and overrides
+    the loose ``kind``/``overlap``/``coalesce_max``/``window`` kwargs —
+    the engine/session API passes the whole bundle through so every
+    consumer reads the same knobs.
 
     ``overlap=True`` compiles the cross-level overlapped round stream
     (`plan.schedule_overlapped`) consumed by
@@ -106,6 +113,9 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     ``window`` caps the overlapped arena's Û pool at that many live
     levels (None = whole sweep resident; see
     ``plan.schedule_overlapped``)."""
+    if options is not None:
+        kind, overlap = options.kind, options.overlap
+        coalesce_max, window = options.coalesce_max, options.window
     if nb % pr or nb % pc:
         raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
     from .schedule import Grid2D
@@ -168,10 +178,30 @@ def _apply_local_rounds(dst, rounds: Sequence[LocalRound], idx,
     return dst
 
 
-def make_sweep(prog: PSelInvProgram):
+def _wrap_sweep(body, batched: bool):
+    """Lift a per-device sweep body into the shard_map calling
+    convention. Single-matrix: per-device shards are (1, nbr, nbc, b, b)
+    under ``in_specs=P("xy")``. Batched: shards are (B, 1, nbr, nbc, b,
+    b) under ``in_specs=P(None, "xy")`` — the leading batch axis is
+    vmapped through the *value* tensors only, while the closed-over
+    index/mask tables (value-independent by construction) are shared
+    across every lane, so a batch of B matrices with one structure costs
+    one trace and one compile."""
+    if batched:
+        def sweep(Lh, Dinv):
+            return jax.vmap(body)(Lh[:, 0], Dinv[:, 0])[:, None]
+    else:
+        def sweep(Lh, Dinv):
+            return body(Lh[0], Dinv[0])[None]
+    return sweep
+
+
+def make_sweep(prog: PSelInvProgram, batched: bool = False):
     """Build the level-pipelined SPMD sweep from the compiled IR tables.
     Call inside shard_map over a 1-D mesh axis "xy" of size pr*pc, with
-    per-device blocks Lh: (nbr, nbc, b, b), Dinv: (nbr, nbc, b, b)."""
+    per-device blocks Lh: (nbr, nbc, b, b), Dinv: (nbr, nbc, b, b).
+    ``batched=True`` builds the multi-matrix variant (leading batch axis
+    on the value tensors; see :func:`_wrap_sweep`)."""
     ex = prog.exec_plan
     assert ex is not None, "build_program() the IR path first"
     b, pr, pc = prog.b, prog.pr, prog.pc
@@ -180,9 +210,7 @@ def make_sweep(prog: PSelInvProgram):
     def gi(buf, i):      # gather rows, bounds statically guaranteed
         return buf.at[i].get(mode="promise_in_bounds")
 
-    def sweep(Lh, Dinv):
-        Lh = Lh[0]        # drop the size-1 sharded device axis
-        Dinv = Dinv[0]
+    def body(Lh, Dinv):
         idx = lax.axis_index("xy")
         r = idx // pc
         c = idx % pc
@@ -268,31 +296,36 @@ def make_sweep(prog: PSelInvProgram):
                 m[:, None, None] * (newd - gi(Ainv_f, slots)),
                 mode="promise_in_bounds")
 
-        return Ainv_f[:-1].reshape(nbr, nbc, b, b)[None]  # drop trash blk
+        return Ainv_f[:-1].reshape(nbr, nbc, b, b)        # drop trash blk
 
-    return sweep
+    return _wrap_sweep(body, batched)
 
 
 # ---------------------------------------------------------------------------
 # overlapped path: one global cross-level round stream over a block arena
 # ---------------------------------------------------------------------------
 
-def make_sweep_overlapped(prog: PSelInvProgram):
+def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     """Build the cross-level overlapped SPMD sweep from the compiled
     global round stream (`plan.schedule_overlapped`).
 
     One flat per-device **arena** of (b, b) blocks holds A⁻¹, the
-    read-only L̂ shard, the compact recycled Û slot pool, and the shared
-    partial / S regions every level aliases (liveness windows +
-    generation-keyed anti-dependences in the scheduler make the reuse
-    safe — the executor just follows the tables); the sweep is a single
-    sequence of coalesced multi-lane ppermute rounds
+    compact recycled Û slot pool, and the shared partial / S regions
+    every level aliases (liveness windows + generation-keyed
+    anti-dependences in the scheduler make the reuse safe — the executor
+    just follows the tables). The read-only input L̂ shard is *not*
+    copied into the arena: xfer-in lanes gather from it directly through
+    the rounds' per-lane ``glh``/``lglh`` masks, shaving N blocks off
+    the per-device footprint. The sweep is a single sequence of
+    coalesced multi-lane ppermute rounds
     with per-lane gather/scatter/accumulate/transpose tables, and the
     masked level GEMMs (plus column/diagonal writes) fire at the round
     boundaries the dependence scheduler pinned them to — level L+1's
     xfer-in and col-bcast lanes ride the same rounds as level L's
     reduce / xfer-out / diag traffic instead of waiting for a level
-    barrier. Call under shard_map exactly like :func:`make_sweep`."""
+    barrier. Call under shard_map exactly like :func:`make_sweep`;
+    ``batched=True`` builds the multi-matrix variant (leading batch
+    axis on the value tensors; see :func:`_wrap_sweep`)."""
     ov = prog.overlap_plan
     assert ov is not None, "build_program(..., overlap=True) first"
     b, pr, pc = prog.b, prog.pr, prog.pc
@@ -302,17 +335,27 @@ def make_sweep_overlapped(prog: PSelInvProgram):
     def gi(buf, i):      # gather rows, bounds statically guaranteed
         return buf.at[i].get(mode="promise_in_bounds")
 
-    def sweep(Lh, Dinv):
-        Lh = Lh[0]        # drop the size-1 sharded device axis
-        Dinv = Dinv[0]
+    def body(Lh, Dinv):
         idx = lax.axis_index("xy")
         r = idx // pc
         c = idx % pc
         dtype = Lh.dtype
         arena = jnp.zeros((ov.arena_blocks, b, b), dtype=dtype)
-        arena = lax.dynamic_update_slice(
-            arena, Lh.reshape(N, b, b), (ov.lh_base, 0, 0))
+        Lh_f = Lh.reshape(N, b, b)
         Dinv_f = Dinv.reshape(N, b, b)
+
+        def gather_lanes(g, lh_m, any_lh: bool):
+            # per-lane select between the arena and the resident input
+            # L̂ shard (no arena copy of L̂ exists). ``any_lh`` is the
+            # static whole-table check — rounds without xfer-in lanes
+            # skip the second gather entirely; where lanes mix, indices
+            # are masked into the untaken buffer so both gathers stay
+            # in bounds
+            if not any_lh:
+                return gi(arena, g)
+            blks = gi(arena, jnp.where(lh_m, 0, g))
+            blks_l = gi(Lh_f, jnp.where(lh_m, g, 0))
+            return jnp.where(lh_m[:, None, None], blks_l, blks)
 
         # structless supernodes (leaves without fill + grid padding)
         if len(ov.diag_set_root):
@@ -387,7 +430,8 @@ def make_sweep_overlapped(prog: PSelInvProgram):
                 lg = jnp.take(jnp.asarray(rnd.lgather), idx, axis=0)
                 ls = jnp.take(jnp.asarray(rnd.lscatter), idx, axis=0)
                 lt = jnp.take(jnp.asarray(rnd.ltmask), idx, axis=0)
-                blks = gi(arena, lg)                        # (LW, b, b)
+                llh = jnp.take(jnp.asarray(rnd.lglh), idx, axis=0)
+                blks = gather_lanes(lg, llh, bool(rnd.lglh.any()))
                 blks = jnp.where(lt[:, None, None],
                                  jnp.swapaxes(blks, -1, -2), blks)
                 # non-participating lanes land in the trash block
@@ -398,7 +442,8 @@ def make_sweep_overlapped(prog: PSelInvProgram):
                 am = jnp.take(jnp.asarray(rnd.addm, dtype=dtype), idx,
                               axis=0)
                 tm = jnp.take(jnp.asarray(rnd.tmask), idx, axis=0)
-                payload = gi(arena, g)                      # (W, b, b)
+                lh = jnp.take(jnp.asarray(rnd.glh), idx, axis=0)
+                payload = gather_lanes(g, lh, bool(rnd.glh.any()))
                 moved = lax.ppermute(payload, "xy", rnd.perm)
                 moved = jnp.where(tm[:, None, None],
                                   jnp.swapaxes(moved, -1, -2), moved)
@@ -409,9 +454,9 @@ def make_sweep_overlapped(prog: PSelInvProgram):
         for op in ov.compute_at[len(ov.rounds)]:
             arena = apply_compute(op, arena)
 
-        return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)[None]
+        return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
 
-    return sweep
+    return _wrap_sweep(body, batched)
 
 
 # ---------------------------------------------------------------------------
@@ -656,13 +701,34 @@ def make_sweep_unrolled(prog: PSelInvProgram):
 # host-side data preparation / gather
 # ---------------------------------------------------------------------------
 
-def prepare_inputs(A, b: int, pr: int, pc: int):
-    """Factorize (host), normalize, and lay out dense-blocked shards.
+def validate_uniform_widths(bs: BlockStructure, b: int) -> None:
+    """The dense-blocked layout requires every supernode at width b —
+    one check shared by every structure entry point (matrix or ready
+    :class:`BlockStructure`)."""
+    if not np.all(bs.widths() == b):
+        raise ValueError(
+            f"structure has non-uniform supernode widths "
+            f"{sorted(set(bs.widths().tolist()))} — the dense-blocked "
+            f"layout requires every supernode to have width exactly "
+            f"b={b}")
 
-    Returns (bs, nb, Lh_sharded_global, Dinv_sharded_global) where the
-    arrays have shape (pr*pc, nbr, nbc, b, b) for in_specs P("xy")."""
+
+def pad_nb(nsuper: int, pr: int, pc: int) -> int:
+    """Pad the supernode count so both grid dims divide it (the one
+    padding rule — engine cache keys depend on it being identical for
+    every entry point)."""
+    nb = nsuper
+    while nb % pr or nb % pc:
+        nb += 1
+    return nb
+
+
+def analyze_structure(A, b: int, pr: int, pc: int
+                      ) -> Tuple[BlockStructure, int]:
+    """The value-independent half of :func:`prepare_inputs`: symbolic
+    factorization + uniform-width validation + grid padding. Everything
+    the engine caches hangs off this (bs, nb) pair."""
     import scipy.sparse as sp
-    import scipy.linalg as sla
 
     A = sp.csr_matrix(A)
     n = A.shape[0]
@@ -673,17 +739,53 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
             f"matrix size n={n} is not a multiple of the supernode block "
             f"size b={b} — pad the matrix (or pick b dividing n)")
     bs = symbolic_factorize(A, max_supernode=b)
-    if not np.all(bs.widths() == b):
+    validate_uniform_widths(bs, b)
+    return bs, pad_nb(bs.nsuper, pr, pc)
+
+
+def prepare_values(A, bs: BlockStructure, nb: int, b: int, pr: int,
+                   pc: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The numeric half of :func:`prepare_inputs`: factorize this
+    matrix's *values* on the host against an already-analyzed structure,
+    normalize, and lay out the dense-blocked shards.
+
+    Returns (Lh, Dinv) with shape (pr*pc, nbr, nbc, b, b) for
+    ``in_specs=P("xy")``. The caller guarantees ``A`` has the sparsity
+    structure that produced ``bs`` — this is the engine's analyze-once /
+    solve-many hot path, so no symbolic work happens here."""
+    import scipy.sparse as sp
+    import scipy.linalg as sla
+
+    A = sp.csr_matrix(A)
+    n = A.shape[0]
+    if n != int(bs.offsets[-1]):
         raise ValueError(
-            f"symbolic factorization produced non-uniform supernode "
-            f"widths {sorted(set(bs.widths().tolist()))} — the "
-            f"dense-blocked layout requires every supernode to have "
-            f"width exactly b={b}")
+            f"matrix size n={n} does not match the analyzed structure "
+            f"(expected n={int(bs.offsets[-1])}) — re-run analyze for a "
+            "different-sized matrix")
     nb0 = bs.nsuper
-    # pad supernode count so both grid dims divide it
-    nb = nb0
-    while nb % pr or nb % pc:
-        nb += 1
+
+    # the structured factorization only ever visits blocks in bs.struct,
+    # so a matrix whose pattern escapes the analyzed structure would be
+    # silently truncated into the selected inverse of a *different*
+    # matrix — reject it instead (O(nnz) block-coordinate check against
+    # the symmetric filled pattern)
+    present = np.zeros((nb0, nb0), dtype=bool)
+    np.fill_diagonal(present, True)
+    for K in range(nb0):
+        present[np.asarray(bs.struct[K], dtype=np.int64), K] = True
+    coo = A.tocoo()
+    hi = np.maximum(coo.row // b, coo.col // b)
+    lo = np.minimum(coo.row // b, coo.col // b)
+    bad = (coo.data != 0) & ~present[hi, lo]
+    if bad.any():
+        blocks = sorted({(int(i), int(j))
+                         for i, j in zip(hi[bad], lo[bad])})[:8]
+        raise ValueError(
+            f"matrix has {int(bad.sum())} nonzero(s) outside the "
+            f"analyzed block structure (e.g. blocks {blocks}) — its "
+            "sparsity pattern differs from the analyzed matrix; re-run "
+            "analyze for this structure")
 
     lu = factorize(A, bs=bs)
     Lhat, _ = normalize_factors(lu)
@@ -706,19 +808,28 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
                  .transpose(1, 3, 0, 2, 4, 5)
                  .reshape(pr * pc, nbr, nbc, b, b))
 
-    return bs, nb, shard(Lh_g), shard(Dinv_g)
+    return shard(Lh_g), shard(Dinv_g)
 
 
-def run_distributed(A, b: int, pr: int, pc: int,
-                    kind: TreeKind = TreeKind.SHIFTED, dtype=jnp.float32,
-                    pipelined: bool = True, overlap: bool = True):
-    """End-to-end distributed selected inversion on pr*pc devices.
-    ``pipelined=True`` runs the IR executor — by default the cross-level
-    *overlapped* round stream; ``overlap=False`` selects the level-serial
-    executor (the A/B baseline). ``pipelined=False`` runs the legacy
-    unrolled sweep (same numerics, larger HLO)."""
-    from jax.sharding import Mesh, PartitionSpec as P
+def prepare_inputs(A, b: int, pr: int, pc: int):
+    """Factorize (host), normalize, and lay out dense-blocked shards.
 
+    Returns (bs, nb, Lh_sharded_global, Dinv_sharded_global) where the
+    arrays have shape (pr*pc, nbr, nbc, b, b) for in_specs P("xy").
+
+    Back-compat composition of :func:`analyze_structure` (symbolic, the
+    part the engine caches) and :func:`prepare_values` (numeric) — new
+    code that solves many matrices of one structure should go through
+    :class:`~.engine.PSelInvEngine` instead."""
+    bs, nb = analyze_structure(A, b, pr, pc)
+    Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
+    return bs, nb, Lh_s, Dinv_s
+
+
+def check_grid_devices(pr: int, pc: int) -> None:
+    """Raise the canonical diagnostic when the process grid oversubscribes
+    the available JAX devices (shared by the engine and the legacy
+    entry point)."""
     avail = len(jax.devices())
     if pr * pc > avail:
         raise ValueError(
@@ -726,14 +837,40 @@ def run_distributed(A, b: int, pr: int, pc: int,
             f"{avail} JAX device(s) are available — shrink the grid or "
             "launch with more devices (e.g. XLA_FLAGS="
             f"--xla_force_host_platform_device_count={pr * pc})")
-    bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
-    if pipelined:
-        prog = build_program(bs, nb, b, pr, pc, kind=kind, overlap=overlap)
-        sweep = make_sweep_overlapped(prog) if overlap else make_sweep(prog)
-    else:
-        prog = build_program_unrolled(bs, nb, b, pr, pc, kind=kind)
-        sweep = make_sweep_unrolled(prog)
 
+
+def run_distributed(A, b: int, pr: int, pc: int,
+                    kind: TreeKind = TreeKind.SHIFTED, dtype=jnp.float32,
+                    pipelined: bool = True, overlap: bool = True):
+    """End-to-end distributed selected inversion on pr*pc devices.
+
+    .. deprecated:: PR 4
+       Thin back-compat shim over :class:`~.engine.PSelInvEngine` — one
+       call per matrix re-enters the engine's structure cache, so
+       repeated calls with one structure reuse the compiled sweep, but
+       the numeric host factorization still runs per call. New code
+       should ``PSelInvEngine.analyze(...)`` once and ``solve`` many
+       times (with a batch axis for multi-matrix workloads).
+
+    ``pipelined=True`` runs the IR executor — by default the cross-level
+    *overlapped* round stream; ``overlap=False`` selects the level-serial
+    executor (the A/B baseline). ``pipelined=False`` runs the legacy
+    unrolled sweep (same numerics, larger HLO)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    check_grid_devices(pr, pc)
+    if pipelined:
+        from .engine import PSelInvEngine
+        from .schedule import Grid2D
+        engine = PSelInvEngine.analyze(
+            A, b=b, grid=Grid2D(pr, pc),
+            options=PlanOptions(kind=kind, overlap=overlap))
+        out = engine.solve(A, dtype=dtype)
+        return np.asarray(out), engine.program
+
+    bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
+    prog = build_program_unrolled(bs, nb, b, pr, pc, kind=kind)
+    sweep = make_sweep_unrolled(prog)
     devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
     mesh = Mesh(devs, ("xy",))
     fn = jax.jit(shard_map(
@@ -742,8 +879,11 @@ def run_distributed(A, b: int, pr: int, pc: int,
     return np.asarray(out), prog
 
 
-def gather_blocks(out: np.ndarray, prog: PSelInvProgram) -> np.ndarray:
-    """Invert the shard layout back to a dense (nb, nb, b, b) block grid."""
+def gather_blocks(out: np.ndarray, prog) -> np.ndarray:
+    """Invert the shard layout back to a dense (nb, nb, b, b) block grid.
+    Accepts the :class:`PSelInvProgram` or anything carrying one under
+    ``.program`` (the engine) — the geometry is derived, not re-passed."""
+    prog = getattr(prog, "program", prog)
     nb, b, pr, pc = prog.nb, prog.b, prog.pr, prog.pc
     nbr, nbc = nb // pr, nb // pc
     return (out.reshape(pr, pc, nbr, nbc, b, b)

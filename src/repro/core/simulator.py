@@ -38,7 +38,7 @@ from .trees import HYBRID_FLAT_MAX, TreeKind, cached_tree
 __all__ = ["NetworkModel", "SimResult", "volumes", "volumes_from_plan",
            "volume_stats", "simulate", "RoundSchedule",
            "round_schedule_from_exec", "round_schedule_from_overlap",
-           "simulate_schedule"]
+           "round_schedule_of", "simulate_schedule"]
 
 
 @dataclass(frozen=True)
@@ -488,7 +488,25 @@ def round_schedule_from_overlap(ov: OverlappedExec,
                          peak_arena_blocks=peak_arena_blocks(ov))
 
 
-def simulate_schedule(sched: RoundSchedule,
+def round_schedule_of(prog_or_engine) -> RoundSchedule:
+    """Flatten a compiled program to its executed timeline, deriving
+    everything from the object itself: accepts a
+    ``pselinv_dist.PSelInvProgram`` (or anything carrying one under
+    ``.program``, e.g. a :class:`~.engine.PSelInvEngine`) and builds the
+    :class:`RoundSchedule` from whichever lowering it compiled — no more
+    hand-passing the (exec, plan) pair the program already owns."""
+    prog = getattr(prog_or_engine, "program", prog_or_engine)
+    if getattr(prog, "overlap_plan", None) is not None:
+        return round_schedule_from_overlap(prog.overlap_plan, prog.plan)
+    if getattr(prog, "exec_plan", None) is not None:
+        return round_schedule_from_exec(prog.exec_plan, prog.plan)
+    raise ValueError(
+        "program has no compiled IR lowering (exec_plan/overlap_plan) — "
+        "build it through build_program()/PSelInvEngine.analyze(), not "
+        "the legacy unrolled path")
+
+
+def simulate_schedule(sched,
                       model: NetworkModel | None = None) -> SimResult:
     """α-β timing of a compiled round stream under the executed BSP
     semantics: a ppermute round completes when its slowest pair does
@@ -497,7 +515,13 @@ def simulate_schedule(sched: RoundSchedule,
     level-serial and the overlapped :class:`RoundSchedule` of one plan
     quantifies the cross-level overlap win under the same network; the
     result also carries the schedule's ``peak_arena_blocks`` so the
-    comparison covers per-device memory alongside time."""
+    comparison covers per-device memory alongside time.
+
+    ``sched`` may be a ready :class:`RoundSchedule`, or a compiled
+    program / engine — anything :func:`round_schedule_of` accepts — in
+    which case the timeline is derived here."""
+    if not isinstance(sched, RoundSchedule):
+        sched = round_schedule_of(sched)
     model = model or NetworkModel()
     P = sched.nranks
     net = _Net(model, P)

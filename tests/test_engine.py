@@ -1,0 +1,243 @@
+"""PSelInvEngine session API tests: the analyze-once / solve-many
+contract.
+
+(a) structure cache — a second ``analyze`` with an identical (structure,
+    b, grid, options) returns the *same* engine object, compiled program
+    included; different options miss;
+(b) no retrace — repeated ``solve`` calls of one shape class reuse the
+    jitted sweep (trace counter flat after warmup), including the
+    batched shape;
+(c) batching — ``solve`` over a leading batch axis of B same-structure
+    matrices is bit-identical (f64, ≤1e-12; observed exact) to a Python
+    loop of single solves;
+(d) shim equivalence — ``run_distributed`` (now a thin shim over the
+    engine) returns exactly what the explicit PlanOptions engine path
+    returns, for both overlapped and level-serial options.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_sub
+
+from repro.core import sparse
+from repro.core.engine import (Grid, PlanOptions, PSelInvEngine,
+                               structure_key)
+from repro.core.schedule import Grid2D
+
+
+def test_grid_is_the_session_alias():
+    """The engine API's Grid *is* schedule.Grid2D — one grid type, no
+    parallel definition to drift."""
+    assert Grid is Grid2D
+
+
+def test_structure_key_content_hash():
+    """Equal structures (independently symbolic-factorized) hash equal;
+    a different sparsity structure hashes different."""
+    import scipy.sparse as sp
+    from repro.core.symbolic import symbolic_factorize
+    A = sparse.laplacian_2d(12, 8)
+    bs1 = symbolic_factorize(sp.csr_matrix(A), max_supernode=8)
+    bs2 = symbolic_factorize(sp.csr_matrix(A + sp.identity(A.shape[0])),
+                             max_supernode=8)   # same pattern, new values
+    bs3 = symbolic_factorize(sp.csr_matrix(sparse.laplacian_2d(16, 8)),
+                             max_supernode=8)
+    assert structure_key(bs1) == structure_key(bs2)
+    assert structure_key(bs1) != structure_key(bs3)
+
+
+def test_engine_structure_cache_and_no_retrace():
+    """Cache-hit + retrace contract, executed on 8 devices: the second
+    analyze of an identical structure is a cache hit returning the same
+    session; solve re-traces neither across repeated single solves nor
+    across repeated batched solves of one shape."""
+    run_sub("""
+        import numpy as np
+        import scipy.sparse as sp
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.engine import Grid, PlanOptions, PSelInvEngine
+
+        A = sparse.laplacian_2d(12, 8)
+        PSelInvEngine.clear_cache()
+        e1 = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                   options=PlanOptions())
+        # same structure, different values, independently analyzed
+        e2 = PSelInvEngine.analyze(A + sp.identity(A.shape[0]), b=8,
+                                   grid=Grid(4, 2), options=PlanOptions())
+        assert e2 is e1, "identical structure must return the cached engine"
+        assert e2.program is e1.program
+        assert PSelInvEngine.cache_hits == 1
+        assert PSelInvEngine.cache_misses == 1
+        # options are part of the key: a different window is a new session
+        e3 = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                   options=PlanOptions(window=2))
+        assert e3 is not e1
+        assert PSelInvEngine.cache_misses == 2
+
+        # ---- solve does not retrace (trace counter flat after warmup)
+        v = e1.prepare_values(A)
+        out1 = e1.solve(v)
+        t0 = e1.trace_count
+        assert t0 >= 1
+        out2 = e1.solve(v)
+        assert e1.trace_count == t0, "second solve of one shape retraced"
+        assert np.asarray(out1).shape == np.asarray(out2).shape
+
+        # batched shape class: one extra trace, then flat
+        from repro.core.engine import stack_values
+        vb = stack_values([v, v, v])
+        e1.solve(vb)
+        tb = e1.trace_count
+        e1.solve(vb)
+        assert e1.trace_count == tb, "second batched solve retraced"
+        print("OK")
+    """)
+
+
+def test_engine_batched_solve_matches_single_loop():
+    """solve(values[B]) over B same-structure matrices is bit-identical
+    (f64) to a loop of single solves, and matches the dense oracle on
+    the selected pattern for every batch member."""
+    run_sub("""
+        import numpy as np
+        import scipy.sparse as sp
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.engine import Grid, PlanOptions, PSelInvEngine
+        from repro.core.pselinv_dist import gather_blocks
+        from repro.core.selinv import dense_selinv_oracle
+
+        A = sparse.laplacian_2d(12, 8)
+        mats = [A + sp.identity(A.shape[0]) * c for c in (0.0, 0.25, 1.0)]
+        eng = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                    options=PlanOptions())
+        outs_b = np.asarray(eng.solve_many(mats, dtype=jnp.float64))
+        assert outs_b.shape[0] == 3
+        for i, M in enumerate(mats):
+            single = np.asarray(eng.solve(M, dtype=jnp.float64))
+            d = abs(outs_b[i] - single).max()
+            assert d <= 1e-12, (i, d)
+            ref = dense_selinv_oracle(M)
+            blocks = gather_blocks(outs_b[i], eng)   # engine accepted
+            bs = eng.bs
+            err = 0.0
+            for K in range(bs.nsuper):
+                err = max(err, abs(blocks[K, K]
+                                   - ref[K*8:(K+1)*8, K*8:(K+1)*8]).max())
+                for I in bs.struct[K]:
+                    I = int(I)
+                    err = max(err, abs(blocks[I, K]
+                                       - ref[I*8:(I+1)*8, K*8:(K+1)*8]).max())
+            assert err < 1e-9, (i, err)
+        print("OK")
+    """, x64=True)
+
+
+def test_planoptions_roundtrip_through_run_distributed_shim():
+    """run_distributed(kind=..., overlap=...) is a pure shim: its output
+    equals the explicit PSelInvEngine path with the equivalent
+    PlanOptions, bit-for-bit, for both executors — and its program is
+    the engine's cached program object."""
+    run_sub("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.engine import Grid, PlanOptions, PSelInvEngine
+        from repro.core.pselinv_dist import run_distributed
+        from repro.core.trees import TreeKind
+
+        A = sparse.laplacian_2d(12, 8)
+        for overlap in (True, False):
+            opts = PlanOptions(kind=TreeKind.SHIFTED, overlap=overlap)
+            eng = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                        options=opts)
+            out_e = np.asarray(eng.solve(A, dtype=jnp.float64))
+            out_s, prog = run_distributed(A, b=8, pr=4, pc=2,
+                                          kind=TreeKind.SHIFTED,
+                                          dtype=jnp.float64,
+                                          overlap=overlap)
+            assert prog is eng.program, "shim bypassed the engine cache"
+            assert abs(out_s - out_e).max() == 0.0
+        print("OK")
+    """, x64=True)
+
+
+def test_engine_simulate_and_stats():
+    """engine.simulate()/round_schedule() derive the executed timeline
+    from the cached program without re-lowering, and simulate_schedule
+    accepts the engine/program directly (no loose (exec, plan) args)."""
+    from repro.core.plan import peak_arena_blocks, ppermute_round_count
+    from repro.core.simulator import (RoundSchedule, round_schedule_of,
+                                      simulate_schedule)
+    A = sparse.laplacian_2d(12, 8)
+    PSelInvEngine.clear_cache()
+    eng = PSelInvEngine.analyze(A, b=8, grid=Grid(1, 1),
+                                options=PlanOptions())
+    rs = eng.round_schedule()
+    assert isinstance(rs, RoundSchedule)
+    assert eng.round_schedule() is rs          # cached, not re-lowered
+    sim = eng.simulate()
+    assert sim.peak_arena_blocks == peak_arena_blocks(
+        eng.program.overlap_plan)
+    assert eng.stats() == {
+        "ppermute_rounds": ppermute_round_count(eng.program.overlap_plan),
+        "peak_arena_blocks": sim.peak_arena_blocks}
+    # simulate_schedule takes the engine (or program) and derives the
+    # schedule itself
+    sim2 = simulate_schedule(eng)
+    assert sim2.total_time == sim.total_time
+    assert round_schedule_of(eng.program).peak_arena_blocks == \
+        sim.peak_arena_blocks
+
+
+def test_engine_rejects_bad_inputs():
+    """analyze validates grid vs devices (the canonical diagnostic) and
+    solve validates value rank; prepare_values rejects a wrong-size
+    matrix instead of silently mis-slicing — and, crucially, a same-size
+    matrix whose sparsity pattern escapes the analyzed structure (the
+    structured factorization would silently truncate it into the
+    selected inverse of a different matrix)."""
+    import scipy.sparse as sp
+    A = sparse.laplacian_2d(12, 8)
+    with pytest.raises(ValueError, match=r"grid 64x64 needs 4096 devices"):
+        PSelInvEngine.analyze(A, b=8, grid=Grid(64, 64))
+    eng = PSelInvEngine.analyze(A, b=8, grid=Grid(1, 1),
+                                options=PlanOptions())
+    with pytest.raises(ValueError, match=r"rank 5 .* rank 6"):
+        eng.solve((np.zeros((4, 4)), np.zeros((4, 4))), dtype=None)
+    with pytest.raises(ValueError, match=r"does not match the analyzed"):
+        eng.prepare_values(sparse.laplacian_2d(16, 8))
+    B = sp.lil_matrix(A)
+    B[0, 95] = B[95, 0] = 1.0           # same n, out-of-structure block
+    with pytest.raises(ValueError, match=r"outside the analyzed block"):
+        eng.prepare_values(B)
+    # same pattern, different values still flows through the guard
+    eng.prepare_values(A + sp.identity(A.shape[0]) * 0.5)
+
+
+def test_engine_cache_eviction_bound():
+    """The structure cache is FIFO-bounded (a long-lived server over a
+    stream of distinct structures must not pin every session forever):
+    exceeding cache_max evicts the oldest session, and re-analyzing an
+    evicted structure builds a fresh engine."""
+    PSelInvEngine.clear_cache()
+    old = PSelInvEngine.cache_max
+    PSelInvEngine.cache_max = 2
+    try:
+        engines = [PSelInvEngine.analyze(sparse.laplacian_2d(nx, 8),
+                                         b=8, grid=Grid(1, 1),
+                                         options=PlanOptions())
+                   for nx in (4, 6, 8)]
+        assert len(PSelInvEngine._cache) == 2
+        again = PSelInvEngine.analyze(sparse.laplacian_2d(8, 8), b=8,
+                                      grid=Grid(1, 1),
+                                      options=PlanOptions())
+        assert again is engines[2]      # newest still cached
+        fresh = PSelInvEngine.analyze(sparse.laplacian_2d(4, 8), b=8,
+                                      grid=Grid(1, 1),
+                                      options=PlanOptions())
+        assert fresh is not engines[0]  # oldest was evicted
+    finally:
+        PSelInvEngine.cache_max = old
+        PSelInvEngine.clear_cache()

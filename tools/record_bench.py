@@ -71,6 +71,20 @@ def main() -> None:
         if os.path.exists(tmp):
             os.unlink(tmp)
 
+    # the engine-era selinv bench must land its batched-throughput and
+    # structure-cache rows (`selinv/solve_batched_us_per_matrix_b{1,4,16}`,
+    # `selinv/engine_cache_hits`) — fail loudly if a refactor drops them
+    # from the trajectory instead of silently recording a thinner entry
+    if "selinv" in args.only.split(",") and "selinv" not in session["failed"]:
+        names = {row["name"] for row in session["benches"]}
+        need = {f"selinv/solve_batched_us_per_matrix_b{B}"
+                for B in (1, 4, 16)} | {"selinv/engine_cache_hits"}
+        missing = sorted(need - names)
+        if missing:
+            raise SystemExit(
+                f"[bench] selinv session is missing required engine "
+                f"rows: {missing}")
+
     hist = []
     if os.path.exists(args.out):
         with open(args.out) as f:
