@@ -1,19 +1,26 @@
 """Selected-inversion numeric benchmark: numpy vs jax vs pallas backends
 (the supernodal GEMM/TRSM hot spots through the kernel layer), plus the
-three-way distributed sweep comparison — legacy unrolled vs level-serial
-IR vs cross-level *overlapped* IR executor (the latter two through the
+four-way distributed sweep comparison — legacy unrolled vs level-serial
+IR vs cross-level *overlapped* IR executor vs the uniform round-*stream*
+executor (one ``lax.fori_loop`` body; the latter three through the
 ``PSelInvEngine`` session API) — on an 8-device host mesh (re-exec'd in
 a subprocess so the main process stays single-device): trace (lower)
 time, XLA compile time, HLO size, run time, ppermute round counts (the
 overlapped+coalesced stream must issue fewer), the simulated
-executed-schedule times of both IR paths, and their peak arena
+executed-schedule times of the IR paths, and their peak arena
 footprints (with the copy-free L̂ gathers the overlapped arena must stay
 within 1.1× of the level-serial executor's transient peak — it lands
-*below* it). The engine section records multi-matrix batched solve
-throughput (``selinv/solve_batched_us_per_matrix_b{1,4,16}``), the
-speedup of one batched B=16 solve over sequential ``run_distributed``
-calls (asserted ≥5× per matrix, cold analyze excluded), and the engine
-structure-cache hit count."""
+*below* it). The stream section records
+``selinv/stream_compile_ms``/``stream_hlo_bytes``/``stream_us_per_call``
+and asserts the stream program's HLO text is ≤ 0.5× the unrolled
+overlapped program's (the whole point: program size independent of the
+round count) while staying bit-identical in the f32 run (≤1e-4
+asserted; tests assert ≤1e-12 in f64). The engine section records
+multi-matrix batched solve throughput
+(``selinv/solve_batched_us_per_matrix_b{1,4,16}``), the speedup of one
+batched B=16 solve over sequential ``run_distributed`` calls (asserted
+≥5× per matrix, cold analyze excluded), and the engine structure-cache
+hit count."""
 from __future__ import annotations
 
 import os
@@ -70,15 +77,17 @@ def _ir_compare_child(full: bool):
 
     from repro.compat import shard_map
     from repro.core.engine import Grid, PlanOptions, PSelInvEngine
-    from repro.core.pselinv_dist import (build_program_unrolled,
+    from repro.core.pselinv_dist import (analyze_structure,
+                                         build_program_unrolled,
                                          make_sweep_unrolled,
-                                         prepare_inputs, run_distributed)
+                                         prepare_values, run_distributed)
     from repro.core.trees import TreeKind
 
     nx = 32 if full else 16          # nb = nx (b=8 supernodes per grid row)
     A = sparse.laplacian_2d(nx, 8)
     b, pr, pc = 8, 4, 2
-    bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
+    bs, nb = analyze_structure(A, b, pr, pc)
+    Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
     devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
     mesh = Mesh(devs, ("xy",))
     Lh = jnp.asarray(Lh_s, jnp.float32)
@@ -88,6 +97,8 @@ def _ir_compare_child(full: bool):
     rounds = {}
     peaks = {}
     engines = {}
+    hlo_bytes = {}
+    times = {}
 
     def lower_unrolled():
         prog = build_program_unrolled(bs, nb, b, pr, pc, TreeKind.SHIFTED)
@@ -95,28 +106,34 @@ def _ir_compare_child(full: bool):
                                  in_specs=(P("xy"), P("xy")),
                                  out_specs=P("xy")))
 
-    def lower_engine(overlap):
+    def lower_engine(overlap, stream=False):
         eng = PSelInvEngine.analyze(
             bs, b=b, grid=Grid(pr, pc),
-            options=PlanOptions(kind=TreeKind.SHIFTED, overlap=overlap))
+            options=PlanOptions(kind=TreeKind.SHIFTED, overlap=overlap,
+                                stream=stream))
         return eng, eng.jitted()
 
-    for name in ("unrolled", "ir", "overlap"):
+    for name in ("unrolled", "ir", "overlap", "stream"):
         t0 = time.perf_counter()
         if name == "unrolled":
             fn = lower_unrolled()
         else:
-            engines[name], fn = lower_engine(overlap=(name == "overlap"))
+            engines[name], fn = lower_engine(
+                overlap=(name in ("overlap", "stream")),
+                stream=(name == "stream"))
         lowered = fn.lower(Lh, Dinv)
         t_trace = time.perf_counter() - t0
-        hlo_lines = len(lowered.as_text().splitlines())
+        hlo_text = lowered.as_text()
+        hlo_lines = len(hlo_text.splitlines())
+        hlo_bytes[name] = len(hlo_text)
         t0 = time.perf_counter()
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
+        times[name] = (t_trace, t_compile)
         out, dt = timed(
             lambda: jax.block_until_ready(compiled(Lh, Dinv)), reps=3)
         outs[name] = np.asarray(out)
-        if name in ("ir", "overlap"):
+        if name in ("ir", "overlap", "stream"):
             # static schedule metrics + executed-schedule timing, straight
             # off the cached session (no re-lowering, no hand-wired
             # round_schedule_from_* plumbing)
@@ -133,12 +150,30 @@ def _ir_compare_child(full: bool):
         csv_row(f"selinv/sweep_{name}_trace_compile",
                 (t_trace + t_compile) * 1e6, f"nb={nb}")
         csv_row(f"selinv/sweep_{name}_run", dt * 1e6, f"nb={nb}")
+        if name == "stream":
+            csv_row("selinv/stream_us_per_call", dt * 1e6, f"nb={nb}")
     err = float(abs(outs["ir"] - outs["unrolled"]).max())
     csv_row("selinv/sweep_ir_vs_unrolled_maxdiff", 0.0, f"err={err:.2e}")
     assert err < 1e-4, err
     err_o = float(abs(outs["overlap"] - outs["ir"]).max())
     csv_row("selinv/sweep_overlap_vs_ir_maxdiff", 0.0, f"err={err_o:.2e}")
     assert err_o < 1e-4, err_o
+    # the uniform round-stream executor replays the overlapped rounds
+    # bit-for-bit (f64 identity asserted in tests; ≤1e-4 in this f32 run)
+    err_t = float(abs(outs["stream"] - outs["overlap"]).max())
+    csv_row("selinv/sweep_stream_vs_overlap_maxdiff", 0.0,
+            f"err={err_t:.2e}")
+    assert err_t < 1e-4, err_t
+    # ...and its program must be small: trace+compile in one fori_loop
+    # body, HLO ≤ 0.5× the unrolled overlapped program's (the stream's
+    # point — program size independent of the round count)
+    csv_row("selinv/stream_compile_ms",
+            sum(times["stream"]) * 1e3,
+            f"nb={nb} overlap_ms={sum(times['overlap']) * 1e3:.0f} "
+            f"trace_ms={times['stream'][0] * 1e3:.0f}")
+    csv_row("selinv/stream_hlo_bytes", float(hlo_bytes["stream"]),
+            f"nb={nb} overlap_hlo_bytes={hlo_bytes['overlap']}")
+    assert hlo_bytes["stream"] <= 0.5 * hlo_bytes["overlap"], hlo_bytes
     csv_row("selinv/sweep_ppermute_rounds", float(rounds["overlap"]),
             f"nb={nb} serial={rounds['ir']} overlap={rounds['overlap']}")
     assert rounds["overlap"] < rounds["ir"], rounds

@@ -47,8 +47,8 @@ from ..compat import shard_map
 from .plan import (PlanOptions, peak_arena_blocks, ppermute_round_count)
 from .pselinv_dist import (PSelInvProgram, analyze_structure, build_program,
                            check_grid_devices, make_sweep,
-                           make_sweep_overlapped, pad_nb, prepare_values,
-                           validate_uniform_widths)
+                           make_sweep_overlapped, make_sweep_stream,
+                           pad_nb, prepare_values, validate_uniform_widths)
 from .schedule import Grid2D
 from .symbolic import BlockStructure
 
@@ -119,6 +119,8 @@ class PSelInvEngine:
     trace_count: int = 0
     solve_calls: int = 0
     _fns: Dict[bool, object] = field(default_factory=dict)
+    _compile_metrics: Dict[Tuple, Dict[str, float]] = \
+        field(default_factory=dict, repr=False)
     _jit_lock: threading.Lock = field(default_factory=threading.Lock,
                                       repr=False)
     _round_schedule: Optional[object] = None
@@ -179,6 +181,32 @@ class PSelInvEngine:
             cls.cache_hits = cls.cache_misses = 0
 
     # ---- lowering / jit (once per (batched, dtype) shape class) -------
+    def _shard_mapped_sweep(self, batched: bool, counted: bool):
+        """The session's sweep (per its :class:`PlanOptions` executor)
+        wrapped for shard_map — the one builder :meth:`jitted` and
+        :meth:`compile_stats` share. ``counted=True`` wraps the body so
+        each (re)trace bumps ``trace_count`` (the no-retrace regression
+        handle); measurement paths pass False so they never touch the
+        counter."""
+        from jax.sharding import PartitionSpec as P
+        if self.options.stream:
+            mk = make_sweep_stream
+        elif self.options.overlap:
+            mk = make_sweep_overlapped
+        else:
+            mk = make_sweep
+        sweep = mk(self.program, batched=batched)
+        if counted:
+            inner = sweep
+
+            def sweep(Lh, Dinv):
+                self.trace_count += 1         # fires at trace time only
+                return inner(Lh, Dinv)
+
+        spec = P(None, "xy") if batched else P("xy")
+        return shard_map(sweep, mesh=self.mesh,
+                         in_specs=(spec, spec), out_specs=spec)
+
     def jitted(self, batched: bool = False):
         """The compiled shard_map sweep as a ``jax.jit`` callable.
         Single-matrix signature: (Lh, Dinv) each (P, nbr, nbc, b, b),
@@ -188,19 +216,8 @@ class PSelInvEngine:
         with self._jit_lock:     # cached sessions are shared: one
             fn = self._fns.get(batched)      # builder per shape class
             if fn is None:
-                from jax.sharding import PartitionSpec as P
-                mk = (make_sweep_overlapped if self.options.overlap
-                      else make_sweep)
-                sweep = mk(self.program, batched=batched)
-
-                def counted(Lh, Dinv):
-                    self.trace_count += 1     # fires at trace time only
-                    return sweep(Lh, Dinv)
-
-                spec = P(None, "xy") if batched else P("xy")
-                fn = jax.jit(shard_map(counted, mesh=self.mesh,
-                                       in_specs=(spec, spec),
-                                       out_specs=spec))
+                fn = jax.jit(self._shard_mapped_sweep(batched,
+                                                      counted=True))
                 self._fns[batched] = fn
         return fn
 
@@ -261,10 +278,68 @@ class PSelInvEngine:
         from .simulator import simulate_schedule
         return simulate_schedule(self.round_schedule(), model)
 
-    def stats(self) -> Dict[str, int]:
+    def compile_stats(self, batched: bool = False, dtype=jnp.float32,
+                      batch_size: int = 1) -> Dict[str, float]:
+        """Compile metrics of the session's sweep program, measured once
+        per (batched, dtype, batch size) shape class and cached:
+        ``trace_lower_ms`` (trace + StableHLO lowering wall time),
+        ``compile_ms`` (XLA compile wall time), ``jaxpr_lines`` (traced
+        program size) and ``hlo_bytes`` (lowered HLO text size). This is
+        how the uniform round-stream's program-size win over the
+        unrolled executors is inspected without running the bench — the
+        stream's jaxpr/HLO no longer grow with the round count. Uses
+        abstract ``ShapeDtypeStruct`` inputs: no values move, but trace,
+        lowering and XLA compilation really run (seconds, not
+        microseconds). Pass the ``batched``/``dtype``/``batch_size``
+        your solves use to measure that exact shape class (jit
+        specializes on all three). Measures a fresh *uncounted* build of
+        the same program, so the no-retrace regression handle
+        (``trace_count``) is never touched — even when solves run
+        concurrently on the shared session."""
+        import time
+
+        key = (batched, jnp.dtype(dtype).name,
+               int(batch_size) if batched else 1)
+        with self._jit_lock:
+            m = self._compile_metrics.get(key)
+        if m is not None:
+            return m
+        shape = ((int(batch_size),) if batched else ()) + (
+            self.grid.size, self.nb // self.grid.pr,
+            self.nb // self.grid.pc, self.b, self.b)
+        sd = jax.ShapeDtypeStruct(shape, dtype)
+        fn = jax.jit(self._shard_mapped_sweep(batched, counted=False))
+        # the AOT path traces ONCE and hands back jaxpr + lowering
+        t0 = time.perf_counter()
+        traced = fn.trace(sd, sd)
+        lowered = traced.lower()
+        t_lower = time.perf_counter() - t0
+        jaxpr_lines = len(str(traced.jaxpr).splitlines())
+        hlo_bytes = len(lowered.as_text())
+        t0 = time.perf_counter()
+        lowered.compile()
+        t_compile = time.perf_counter() - t0
+        m = {"trace_lower_ms": t_lower * 1e3,
+             "compile_ms": t_compile * 1e3,
+             "jaxpr_lines": jaxpr_lines,
+             "hlo_bytes": hlo_bytes}
+        with self._jit_lock:
+            m = self._compile_metrics.setdefault(key, m)
+        return m
+
+    def stats(self, compile: bool = False) -> Dict[str, float]:
         """Static schedule metrics of the cached program: ppermute round
-        count and peak per-device arena footprint (blocks)."""
+        count and peak per-device arena footprint (blocks).
+        ``compile=True`` additionally reports compile metrics for the
+        f32 single-matrix shape class (:meth:`compile_stats` —
+        trace+lower / compile wall time, jaxpr line count, HLO text
+        size), so the stream's compile-time/program-size win is
+        inspectable straight off the session; call
+        :meth:`compile_stats` directly for a batched or non-f32 class."""
         ex = (self.program.overlap_plan if self.options.overlap
               else self.program.exec_plan)
-        return {"ppermute_rounds": ppermute_round_count(ex),
-                "peak_arena_blocks": peak_arena_blocks(ex)}
+        out = {"ppermute_rounds": ppermute_round_count(ex),
+               "peak_arena_blocks": peak_arena_blocks(ex)}
+        if compile:
+            out.update(self.compile_stats())
+        return out

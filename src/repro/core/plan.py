@@ -82,8 +82,8 @@ __all__ = [
     "pack_edges", "CommRound", "LocalRound", "LevelExec", "ExecPlan",
     "compile_exec", "exec_byte_counts", "etree_levels",
     "GlobalRound", "ComputeOp", "OverlapLevel", "OverlappedExec",
-    "schedule_overlapped", "overlapped_byte_counts", "ppermute_round_count",
-    "peak_arena_blocks",
+    "schedule_overlapped", "schedule_stream", "overlapped_byte_counts",
+    "ppermute_round_count", "peak_arena_blocks",
 ]
 
 
@@ -104,11 +104,24 @@ class PlanOptions:
     baseline. ``coalesce_max``: max blocks one (src, dst) pair may carry
     as lanes of a single ppermute. ``window``: Û pool liveness window in
     adjacent elimination-tree levels (``None`` = whole sweep resident;
-    see :func:`schedule_overlapped`)."""
+    see :func:`schedule_overlapped`). ``stream``: additionally lower the
+    overlapped round stream into the uniform round-indexed device tables
+    of ``core/stream.py`` and execute the whole sweep as one
+    ``lax.fori_loop`` body (program size independent of the round count
+    — the same rounds, replayed from tables instead of unrolled code;
+    requires ``overlap=True``)."""
     kind: TreeKind = TreeKind.SHIFTED
     overlap: bool = True
     coalesce_max: int = 8
     window: int | None = None
+    stream: bool = False
+
+    def __post_init__(self):
+        if self.stream and not self.overlap:
+            raise ValueError(
+                "PlanOptions(stream=True) lowers the *overlapped* round "
+                "stream — it requires overlap=True (the level-serial "
+                "executor has no global round stream to lower)")
 
 
 # ---------------------------------------------------------------------------
@@ -1347,3 +1360,21 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
         arena_blocks=arena_blocks, trash=trash,
         diag_set_root=droot, diag_set_slot=dslot,
         levels=levels, rounds=rounds, compute_at=compute_at, window=window)
+
+
+def schedule_stream(plan: CommPlan, coalesce_max: int = 8,
+                    window: int | None = None, *,
+                    options: PlanOptions | None = None):
+    """Compile the IR into the **uniform round-stream** executable form:
+    the overlapped lowering of :func:`schedule_overlapped`, lowered once
+    more into round-indexed device tables (``core/stream.py``) that a
+    single ``lax.fori_loop`` body replays — identical rounds, identical
+    lane and accumulation order, program size independent of the round
+    count. Returns ``(OverlappedExec, StreamTables)``: the overlapped
+    object stays the source of truth for round counts, byte accounting
+    and the arena footprint; the tables are what the device executes
+    (``pselinv_dist.make_sweep_stream``)."""
+    from .stream import lower_stream
+    ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
+                             window=window, options=options)
+    return ov, lower_stream(ov)

@@ -37,6 +37,7 @@ zeros for structurally-zero blocks: numerics are unaffected, while the
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -50,14 +51,17 @@ from ..compat import shard_map
 from ..kernels.ops import pselinv_level_gemm, pselinv_round_gemm
 from .plan import (CommPlan, CommRound, ExecPlan, LocalRound,
                    OverlappedExec, PlanOptions, build_plan, compile_exec,
-                   merge_round_lists, schedule_overlapped)
+                   merge_round_lists, schedule_overlapped, schedule_stream)
+from .stream import (COMP_DIAGW, COMP_GEMM, COMP_NOOP, COMP_SCOMP,
+                     COMP_WRITE, StreamTables)
 from .symbolic import BlockStructure, symbolic_factorize
 from .supernodal_lu import factorize
 from .selinv import normalize_factors
 from .trees import CommTree, TreeKind, build_tree, stable_hash
 
 __all__ = ["PSelInvProgram", "build_program", "build_program_unrolled",
-           "make_sweep", "make_sweep_overlapped", "make_sweep_unrolled",
+           "make_sweep", "make_sweep_overlapped", "make_sweep_stream",
+           "make_sweep_unrolled",
            "analyze_structure", "prepare_values", "prepare_inputs",
            "run_distributed", "gather_blocks"]
 
@@ -75,6 +79,7 @@ class PSelInvProgram:
     plan: Optional[CommPlan] = None
     exec_plan: Optional[ExecPlan] = None
     overlap_plan: Optional[OverlappedExec] = None
+    stream_tables: Optional[StreamTables] = None   # uniform round stream
     iters: Optional[list] = None        # legacy unrolled schedule
 
     @property
@@ -94,14 +99,15 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
                   kind: TreeKind = TreeKind.SHIFTED,
                   overlap: bool = False,
                   coalesce_max: int = 8,
-                  window: int | None = None, *,
+                  window: int | None = None,
+                  stream: bool = False, *,
                   options: PlanOptions | None = None) -> PSelInvProgram:
     """Build the CommPlan IR and compile it to executable tables.
 
     ``options`` (a :class:`~.plan.PlanOptions`) bundles and overrides
-    the loose ``kind``/``overlap``/``coalesce_max``/``window`` kwargs —
-    the engine/session API passes the whole bundle through so every
-    consumer reads the same knobs.
+    the loose ``kind``/``overlap``/``coalesce_max``/``window``/``stream``
+    kwargs — the engine/session API passes the whole bundle through so
+    every consumer reads the same knobs.
 
     ``overlap=True`` compiles the cross-level overlapped round stream
     (`plan.schedule_overlapped`) consumed by
@@ -112,24 +118,42 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     runs ``plan.compile_exec(prog.plan)`` on the shared CommPlan.
     ``window`` caps the overlapped arena's Û pool at that many live
     levels (None = whole sweep resident; see
-    ``plan.schedule_overlapped``)."""
+    ``plan.schedule_overlapped``). ``stream=True`` (implies
+    ``overlap=True``) additionally lowers the overlapped rounds into the
+    uniform round-indexed tables of ``core/stream.py`` for
+    :func:`make_sweep_stream` — the whole sweep as one ``lax.fori_loop``
+    body."""
     if options is not None:
         kind, overlap = options.kind, options.overlap
         coalesce_max, window = options.coalesce_max, options.window
+        stream = options.stream
+    if stream and not overlap:
+        raise ValueError(
+            "stream=True lowers the overlapped round stream — it "
+            "requires overlap=True")
     if nb % pr or nb % pc:
         raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
     from .schedule import Grid2D
     plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
+    ov = st = None
+    if stream:
+        ov, st = schedule_stream(plan, coalesce_max=coalesce_max,
+                                 window=window)
+    elif overlap:
+        ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
+                                 window=window)
     return PSelInvProgram(
         nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
         exec_plan=None if overlap else compile_exec(plan),
-        overlap_plan=(schedule_overlapped(plan, coalesce_max=coalesce_max,
-                                          window=window)
-                      if overlap else None))
+        overlap_plan=ov, stream_tables=st)
 
 
 def _dyn(buf, i):
     return lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+
+def _gi(buf, i):         # gather rows, bounds statically guaranteed
+    return buf.at[i].get(mode="promise_in_bounds")
 
 
 def _apply_comm_rounds(dst, rounds: Sequence[CommRound], idx, op: str,
@@ -178,6 +202,21 @@ def _apply_local_rounds(dst, rounds: Sequence[LocalRound], idx,
     return dst
 
 
+def _gather_lanes(arena, lh_f, g, lh_m, mixed: bool):
+    """Per-lane select between the arena and the resident input L̂ shard
+    (no arena copy of L̂ exists). ``mixed`` is the static whole-table
+    check — streams/rounds without xfer-in lanes skip the second gather
+    entirely; where lanes mix, indices are masked into the untaken
+    buffer so both gathers stay in bounds. One definition shared by the
+    overlapped and stream executors — the masking trick must never
+    drift between them."""
+    if not mixed:
+        return _gi(arena, g)
+    blks = _gi(arena, jnp.where(lh_m, 0, g))
+    blks_l = _gi(lh_f, jnp.where(lh_m, g, 0))
+    return jnp.where(lh_m[:, None, None], blks_l, blks)
+
+
 def _wrap_sweep(body, batched: bool):
     """Lift a per-device sweep body into the shard_map calling
     convention. Single-matrix: per-device shards are (1, nbr, nbc, b, b)
@@ -207,9 +246,6 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
     b, pr, pc = prog.b, prog.pr, prog.pc
     nbr, nbc = ex.nbr, ex.nbc
 
-    def gi(buf, i):      # gather rows, bounds statically guaranteed
-        return buf.at[i].get(mode="promise_in_bounds")
-
     def body(Lh, Dinv):
         idx = lax.axis_index("xy")
         r = idx // pc
@@ -227,7 +263,7 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
             slots = jnp.asarray(ex.diag_set_slot)
             m = (jnp.asarray(ex.diag_set_root) == idx).astype(dtype)
             Ainv_f = Ainv_f.at[slots].add(
-                m[:, None, None] * gi(Dinv_f, slots),
+                m[:, None, None] * _gi(Dinv_f, slots),
                 mode="promise_in_bounds")
 
         for lv in ex.levels:
@@ -281,7 +317,7 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
 
             # ---- (2,3) diagonal:  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
             krs = jnp.asarray(lv.krs)
-            Arow = gi(Ainv_f[:-1].reshape(nbr, nbc, b, b), krs)
+            Arow = _gi(Ainv_f[:-1].reshape(nbr, nbc, b, b), krs)
             S = jnp.einsum("kjab,kjcb->kac",
                            Arow * cm[:, :, None, None], Uh_m)
             rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype), r,
@@ -291,9 +327,9 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
             S = _apply_comm_rounds(S, lv.diag_reduce, idx, "add")[:-1]
             slots = jnp.asarray(lv.diag_slot)
             m = (jnp.asarray(lv.diag_root) == idx).astype(dtype)
-            newd = gi(Dinv_f, slots) - jnp.swapaxes(S, -1, -2)
+            newd = _gi(Dinv_f, slots) - jnp.swapaxes(S, -1, -2)
             Ainv_f = Ainv_f.at[slots].add(
-                m[:, None, None] * (newd - gi(Ainv_f, slots)),
+                m[:, None, None] * (newd - _gi(Ainv_f, slots)),
                 mode="promise_in_bounds")
 
         return Ainv_f[:-1].reshape(nbr, nbc, b, b)        # drop trash blk
@@ -304,6 +340,69 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
 # ---------------------------------------------------------------------------
 # overlapped path: one global cross-level round stream over a block arena
 # ---------------------------------------------------------------------------
+
+
+# The four arena compute phases of the overlapped sweep — ONE definition
+# shared by the unrolled overlapped executor (per-level shapes, static
+# tables) and the stream executor (NK-padded shapes, dynamically indexed
+# tables): the delta-add and masking tricks below are the bit-identity
+# contract between the two and must never drift. Each helper derives the
+# supernode count from its table operands, so both shape regimes flow
+# through the same code.
+
+def _phase_gemm(arena, ut, cm, N, nbr, nbc, b, base_p):
+    """Level GEMM: partial[k, i] = Σ_j A⁻¹[i, j] · Û_m[k, j]ᵀ into the
+    shared partial region. ``ut`` are the (nk*nbc,) arena addresses of
+    the Û lanes (trash where struct-absent — ``cm`` zeroes those)."""
+    nk = ut.shape[0] // nbc
+    U = _gi(arena, ut).reshape(nk, nbc, b, b)
+    Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+    partial = pselinv_round_gemm(Ainv, U, cm)
+    return lax.dynamic_update_slice(
+        arena, partial.reshape(nk * nbr, b, b), (base_p, 0, 0))
+
+
+def _phase_write(arena, kcs, wr, wc, N, nbr, nbc, b, base_p):
+    """A⁻¹(C, K) column write for every K of the level: masked delta +
+    scatter-add — same-level K's write disjoint (device, slot) pairs, so
+    duplicate ``kcs`` entries add zeros."""
+    nk = kcs.shape[0]
+    partial = lax.slice_in_dim(
+        arena, base_p, base_p + nk * nbr).reshape(nk, nbr, b, b)
+    w = jnp.transpose(wr * wc[:, None])                # (nbr, nk)
+    Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+    old = Ainv.at[:, kcs].get(mode="promise_in_bounds")
+    new = -jnp.swapaxes(partial, 0, 1)                 # (nbr, nk, b, b)
+    Ainv = Ainv.at[:, kcs].add(w[:, :, None, None] * (new - old),
+                               mode="promise_in_bounds")
+    return lax.dynamic_update_slice(
+        arena, Ainv.reshape(N, b, b), (0, 0, 0))
+
+
+def _phase_scomp(arena, ut, cm, krs, rm, N, nbr, nbc, b, base_s):
+    """Diagonal partial sum S(K) = Σ_I A⁻¹(K, I) · L̂(I, K) into the
+    shared S region (masked to row K%pr by ``rm``)."""
+    nk = krs.shape[0]
+    Uh_m = _gi(arena, ut).reshape(nk, nbc, b, b) * cm[:, :, None, None]
+    Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+    Arow = _gi(Ainv, krs)
+    S = jnp.einsum("kjab,kjcb->kac", Arow * cm[:, :, None, None], Uh_m)
+    return lax.dynamic_update_slice(
+        arena, S * rm[:, None, None], (base_s, 0, 0))
+
+
+def _phase_diagw(arena, Dinv_f, slots, root, idx, N, base_s, dtype):
+    """Diagonal write A⁻¹(K,K) = D⁻¹ − Sᵀ at the owner. ``slots`` may be
+    padded with the trash block (stream path): those lanes carry a
+    no-device root (mask 0) and the D⁻¹ gather clamps them in-bounds —
+    an identity for the real, always-< N, slots."""
+    nk = slots.shape[0]
+    S = lax.slice_in_dim(arena, base_s, base_s + nk)
+    m = (root == idx).astype(dtype)
+    newd = _gi(Dinv_f, jnp.minimum(slots, N - 1)) - jnp.swapaxes(S, -1, -2)
+    return arena.at[slots].add(
+        m[:, None, None] * (newd - _gi(arena, slots)),
+        mode="promise_in_bounds")
 
 def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     """Build the cross-level overlapped SPMD sweep from the compiled
@@ -332,9 +431,6 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     nbr, nbc = ov.nbr, ov.nbc
     N = ov.n_ainv
 
-    def gi(buf, i):      # gather rows, bounds statically guaranteed
-        return buf.at[i].get(mode="promise_in_bounds")
-
     def body(Lh, Dinv):
         idx = lax.axis_index("xy")
         r = idx // pc
@@ -345,83 +441,45 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
         Dinv_f = Dinv.reshape(N, b, b)
 
         def gather_lanes(g, lh_m, any_lh: bool):
-            # per-lane select between the arena and the resident input
-            # L̂ shard (no arena copy of L̂ exists). ``any_lh`` is the
-            # static whole-table check — rounds without xfer-in lanes
-            # skip the second gather entirely; where lanes mix, indices
-            # are masked into the untaken buffer so both gathers stay
-            # in bounds
-            if not any_lh:
-                return gi(arena, g)
-            blks = gi(arena, jnp.where(lh_m, 0, g))
-            blks_l = gi(Lh_f, jnp.where(lh_m, g, 0))
-            return jnp.where(lh_m[:, None, None], blks_l, blks)
+            return _gather_lanes(arena, Lh_f, g, lh_m, any_lh)
 
         # structless supernodes (leaves without fill + grid padding)
         if len(ov.diag_set_root):
             slots = jnp.asarray(ov.diag_set_slot)
             m = (jnp.asarray(ov.diag_set_root) == idx).astype(dtype)
             arena = arena.at[slots].add(
-                m[:, None, None] * gi(Dinv_f, slots),
+                m[:, None, None] * _gi(Dinv_f, slots),
                 mode="promise_in_bounds")
 
-        def gather_u(lv, nk, arena):
-            # the level's Û lanes live in compact recycled pool slots;
-            # the per-device table maps the dense (k, j) lane grid back
-            # onto them (trash lanes are struct-masked before use)
-            ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
-            return gi(arena, ut).reshape(nk, nbc, b, b)
-
         def apply_compute(op, arena):
+            # numerics live in the shared _phase_* helpers (one
+            # definition with the stream executor); this just feeds them
+            # the level's static tables. The per-device Û gather table
+            # maps the dense (k, j) lane grid onto the compact recycled
+            # pool slots (trash lanes are struct-masked before use)
             lv = ov.levels[op.level]
-            nk = len(lv.Ks)
             cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
             if op.kind == "gemm":
-                U = gather_u(lv, nk, arena)
-                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
-                partial = pselinv_round_gemm(Ainv, U, cm)
-                return lax.dynamic_update_slice(
-                    arena, partial.reshape(nk * nbr, b, b),
-                    (lv.base_p, 0, 0))
+                ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
+                return _phase_gemm(arena, ut, cm, N, nbr, nbc, b,
+                                   lv.base_p)
             if op.kind == "write":
-                partial = lax.slice_in_dim(
-                    arena, lv.base_p, lv.base_p + nk * nbr
-                    ).reshape(nk, nbr, b, b)
-                kcs = jnp.asarray(lv.kcs)
                 wr = jnp.take(jnp.asarray(lv.col_write_row, dtype=dtype),
                               r, axis=0)                    # (nk, nbr)
                 wc = jnp.take(jnp.asarray(lv.col_write_col, dtype=dtype),
                               c, axis=0)                    # (nk,)
-                w = jnp.transpose(wr * wc[:, None])         # (nbr, nk)
-                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
-                old = Ainv.at[:, kcs].get(mode="promise_in_bounds")
-                new = -jnp.swapaxes(partial, 0, 1)          # (nbr, nk, b, b)
-                # masked delta + scatter-add: same-level K's write disjoint
-                # (device, slot) pairs, so duplicate kcs entries add zeros
-                Ainv = Ainv.at[:, kcs].add(
-                    w[:, :, None, None] * (new - old),
-                    mode="promise_in_bounds")
-                return lax.dynamic_update_slice(
-                    arena, Ainv.reshape(N, b, b), (0, 0, 0))
+                return _phase_write(arena, jnp.asarray(lv.kcs), wr, wc,
+                                    N, nbr, nbc, b, lv.base_p)
             if op.kind == "scomp":
-                U = gather_u(lv, nk, arena)
-                Uh_m = U * cm[:, :, None, None]
-                Ainv = lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
-                Arow = gi(Ainv, jnp.asarray(lv.krs))
-                S = jnp.einsum("kjab,kjcb->kac",
-                               Arow * cm[:, :, None, None], Uh_m)
+                ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
                 rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype),
                               r, axis=0)                    # (nk,)
-                return lax.dynamic_update_slice(
-                    arena, S * rm[:, None, None], (lv.base_s, 0, 0))
+                return _phase_scomp(arena, ut, cm, jnp.asarray(lv.krs),
+                                    rm, N, nbr, nbc, b, lv.base_s)
             # "diagw":  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
-            S = lax.slice_in_dim(arena, lv.base_s, lv.base_s + nk)
-            slots = jnp.asarray(lv.diag_slot)
-            m = (jnp.asarray(lv.diag_root) == idx).astype(dtype)
-            newd = gi(Dinv_f, slots) - jnp.swapaxes(S, -1, -2)
-            return arena.at[slots].add(
-                m[:, None, None] * (newd - gi(arena, slots)),
-                mode="promise_in_bounds")
+            return _phase_diagw(arena, Dinv_f, jnp.asarray(lv.diag_slot),
+                                jnp.asarray(lv.diag_root), idx, N,
+                                lv.base_s, dtype)
 
         for t, rnd in enumerate(ov.rounds):
             for op in ov.compute_at[t]:
@@ -447,13 +505,189 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
                 moved = lax.ppermute(payload, "xy", rnd.perm)
                 moved = jnp.where(tm[:, None, None],
                                   jnp.swapaxes(moved, -1, -2), moved)
-                cur = gi(arena, s_)
+                cur = _gi(arena, s_)
                 arena = arena.at[s_].set(
                     moved + am[:, None, None] * cur,
                     mode="promise_in_bounds")
         for op in ov.compute_at[len(ov.rounds)]:
             arena = apply_compute(op, arena)
 
+        return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+
+    return _wrap_sweep(body, batched)
+
+
+# ---------------------------------------------------------------------------
+# stream path: the whole sweep as one lax.fori_loop over uniform tables
+# ---------------------------------------------------------------------------
+
+def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
+    """Build the uniform round-stream SPMD sweep: the entire overlapped
+    schedule as ONE ``lax.fori_loop`` body over the round-indexed device
+    tables of ``core/stream.py`` (:class:`~.stream.StreamTables`).
+
+    Each iteration ``t`` (a) dispatches the boundary's compute slots —
+    level GEMM / column write / S-einsum / diagonal write behind
+    per-round phase flags, one ``lax.switch`` per slot whose branches
+    dynamic-index the level-stacked tables — (b) applies the owner-local
+    copy lanes, and (c) issues one *static* full-ring ``ppermute`` per
+    used mesh shift, with per-round ``dynamic_slice``-selected
+    gather/scatter/accumulate/transpose/L̂-gather lane tables (padded
+    lanes scatter into the trash block, exactly like the unrolled
+    executor's coalescing padding). The replayed round order, lane order
+    and accumulation order are identical to
+    :func:`make_sweep_overlapped`'s, so the f64 output is bit-identical
+    — but jaxpr/HLO size no longer grows with the round count: the
+    rounds are data (a few stacked tables), not code. Call under
+    shard_map exactly like :func:`make_sweep`; ``batched=True`` builds
+    the multi-matrix variant."""
+    st = prog.stream_tables
+    assert st is not None, \
+        "build_program(..., options=PlanOptions(stream=True)) first"
+    b = prog.b
+    pr, pc = st.pr, st.pc
+    P = pr * pc
+    nbr, nbc = st.nbr, st.nbc
+    N = st.n_ainv
+    NK = st.NK
+    S = len(st.shifts)
+    perms = [[(i, (i + delta) % P) for i in range(P)]
+             for delta in st.shifts]
+    # static whole-table checks: streams/locals that never carry an
+    # L̂-gathering lane skip the second gather entirely
+    comm_any_lh = bool(st.glh.any()) if S else False
+    local_any_lh = bool(st.lglh.any()) if st.LW else False
+
+    def body(Lh, Dinv):
+        idx = lax.axis_index("xy")
+        r = idx // pc
+        c = idx % pc
+        dtype = Lh.dtype
+        Lh_f = Lh.reshape(N, b, b)
+        Dinv_f = Dinv.reshape(N, b, b)
+        arena = jnp.zeros((st.arena_blocks, b, b), dtype=dtype)
+
+        # structless supernodes (leaves without fill + grid padding)
+        if len(st.diag_set_root):
+            slots = jnp.asarray(st.diag_set_slot)
+            m = (jnp.asarray(st.diag_set_root) == idx).astype(dtype)
+            arena = arena.at[slots].add(
+                m[:, None, None] * _gi(Dinv_f, slots),
+                mode="promise_in_bounds")
+
+        # round-stacked device tables: one closed-over constant each,
+        # sliced per round inside the loop body
+        G = jnp.asarray(st.gather)
+        SCT = jnp.asarray(st.scatter)
+        AM = jnp.asarray(st.addm, dtype=dtype)
+        TM = jnp.asarray(st.tmask)
+        GLH = jnp.asarray(st.glh)
+        RSH = jnp.asarray(st.recv_shift)
+        LG = jnp.asarray(st.lgather)
+        LS = jnp.asarray(st.lscatter)
+        LT = jnp.asarray(st.ltmask)
+        LLH = jnp.asarray(st.lglh)
+        CK = jnp.asarray(st.comp_kind)
+        CL = jnp.asarray(st.comp_level)
+        # level-stacked compute tables (padded to the widest level)
+        UG = jnp.asarray(st.u_gather)
+        CM = jnp.asarray(st.cmask, dtype=dtype)
+        KCS = jnp.asarray(st.kcs)
+        KRS = jnp.asarray(st.krs)
+        CWR = jnp.asarray(st.col_write_row, dtype=dtype)
+        CWC = jnp.asarray(st.col_write_col, dtype=dtype)
+        DRM = jnp.asarray(st.diag_rowmask, dtype=dtype)
+        DRT = jnp.asarray(st.diag_root)
+        DSL = jnp.asarray(st.diag_slot)
+
+        def at(tab, i):
+            return lax.dynamic_index_in_dim(tab, i, 0, keepdims=False)
+
+        # ---- the four compute phases, level selected dynamically ------
+        # numerics live in the shared _phase_* helpers (one definition
+        # with the unrolled overlapped executor); these branches only
+        # dynamic-index the level-stacked tables, padded to NK: padded
+        # rows carry zero struct masks (exact zeros into the shared
+        # regions' tails) and trash diag slots — numerically inert
+        def br_noop(L, arena):
+            return arena
+
+        def br_gemm(L, arena):
+            ut = jnp.take(at(UG, L), idx, axis=0)        # (NK*nbc,)
+            cm = jnp.take(at(CM, L), c, axis=0)          # (NK, nbc)
+            return _phase_gemm(arena, ut, cm, N, nbr, nbc, b, st.base_p)
+
+        def br_write(L, arena):
+            wr = jnp.take(at(CWR, L), r, axis=0)         # (NK, nbr)
+            wc = jnp.take(at(CWC, L), c, axis=0)         # (NK,)
+            return _phase_write(arena, at(KCS, L), wr, wc,
+                                N, nbr, nbc, b, st.base_p)
+
+        def br_scomp(L, arena):
+            ut = jnp.take(at(UG, L), idx, axis=0)
+            cm = jnp.take(at(CM, L), c, axis=0)
+            rm = jnp.take(at(DRM, L), r, axis=0)         # (NK,)
+            return _phase_scomp(arena, ut, cm, at(KRS, L), rm,
+                                N, nbr, nbc, b, st.base_s)
+
+        def br_diagw(L, arena):
+            return _phase_diagw(arena, Dinv_f, at(DSL, L), at(DRT, L),
+                                idx, N, st.base_s, dtype)
+
+        # branch order is the COMP_* id order — wired explicitly so the
+        # phase-flag encoding can't drift from the dispatch table
+        branches = [None] * 5
+        branches[COMP_NOOP] = br_noop
+        branches[COMP_GEMM] = br_gemm
+        branches[COMP_WRITE] = br_write
+        branches[COMP_SCOMP] = br_scomp
+        branches[COMP_DIAGW] = br_diagw
+
+        def round_body(t, arena):
+            # (a) this boundary's compute slots, in dependence order
+            if st.C:
+                ck = at(CK, t)
+                cl = at(CL, t)
+                for j in range(st.C):
+                    arena = lax.switch(ck[j], branches, cl[j], arena)
+            # (b) owner-local copy lanes
+            if st.LW:
+                lg = jnp.take(at(LG, t), idx, axis=0)
+                ls = jnp.take(at(LS, t), idx, axis=0)
+                ltm = jnp.take(at(LT, t), idx, axis=0)
+                llh = jnp.take(at(LLH, t), idx, axis=0)
+                blks = _gather_lanes(arena, Lh_f, lg, llh, local_any_lh)
+                blks = jnp.where(ltm[:, None, None],
+                                 jnp.swapaxes(blks, -1, -2), blks)
+                arena = arena.at[ls].set(blks, mode="promise_in_bounds")
+            # (c) comm: the device's one outgoing lane stack is gathered
+            # once and shipped on EVERY used ring shift (static perms);
+            # each receiver keeps only the arrival of its one receive
+            # shift and scatters it once — identical snapshot semantics
+            # to the unrolled round's single gather/permute/scatter
+            if S:
+                g = jnp.take(at(G, t), idx, axis=0)      # (W,)
+                lh = jnp.take(at(GLH, t), idx, axis=0)
+                payload = _gather_lanes(arena, Lh_f, g, lh, comm_any_lh)
+                rsh = jnp.take(at(RSH, t), idx, axis=0)  # scalar
+                moved = jnp.zeros_like(payload)
+                for si in range(S):
+                    mv = lax.ppermute(payload, "xy", perms[si])
+                    moved = jnp.where(rsh == si, mv, moved)
+                tm = jnp.take(at(TM, t), idx, axis=0)
+                moved = jnp.where(tm[:, None, None],
+                                  jnp.swapaxes(moved, -1, -2), moved)
+                s_ = jnp.take(at(SCT, t), idx, axis=0)
+                am = jnp.take(at(AM, t), idx, axis=0)
+                cur = _gi(arena, s_)
+                arena = arena.at[s_].set(
+                    moved + am[:, None, None] * cur,
+                    mode="promise_in_bounds")
+            return arena
+
+        # steps = nrounds + 1: the final iteration's comm tables are
+        # all-trash no-ops and only the last boundary's compute fires
+        arena = lax.fori_loop(0, st.steps, round_body, arena)
         return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
 
     return _wrap_sweep(body, batched)
@@ -821,6 +1055,11 @@ def prepare_inputs(A, b: int, pr: int, pc: int):
     part the engine caches) and :func:`prepare_values` (numeric) — new
     code that solves many matrices of one structure should go through
     :class:`~.engine.PSelInvEngine` instead."""
+    warnings.warn(
+        "prepare_inputs is deprecated: use PSelInvEngine.analyze(...) + "
+        "engine.prepare_values(...) (the analyze-once/solve-many split) "
+        "or analyze_structure/prepare_values directly",
+        DeprecationWarning, stacklevel=2)
     bs, nb = analyze_structure(A, b, pr, pc)
     Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
     return bs, nb, Lh_s, Dinv_s
@@ -858,6 +1097,11 @@ def run_distributed(A, b: int, pr: int, pc: int,
     unrolled sweep (same numerics, larger HLO)."""
     from jax.sharding import Mesh, PartitionSpec as P
 
+    warnings.warn(
+        "run_distributed is deprecated: use PSelInvEngine.analyze(...) "
+        "once and engine.solve(...) per matrix (batched solves via a "
+        "leading batch axis / solve_many)",
+        DeprecationWarning, stacklevel=2)
     check_grid_devices(pr, pc)
     if pipelined:
         from .engine import PSelInvEngine
@@ -868,7 +1112,10 @@ def run_distributed(A, b: int, pr: int, pc: int,
         out = engine.solve(A, dtype=dtype)
         return np.asarray(out), engine.program
 
-    bs, nb, Lh_s, Dinv_s = prepare_inputs(A, b, pr, pc)
+    # composed directly (not through prepare_inputs) so one deprecated
+    # call warns once, attributed to the caller
+    bs, nb = analyze_structure(A, b, pr, pc)
+    Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
     prog = build_program_unrolled(bs, nb, b, pr, pc, kind=kind)
     sweep = make_sweep_unrolled(prog)
     devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)

@@ -38,6 +38,7 @@ from .trees import HYBRID_FLAT_MAX, TreeKind, cached_tree
 __all__ = ["NetworkModel", "SimResult", "volumes", "volumes_from_plan",
            "volume_stats", "simulate", "RoundSchedule",
            "round_schedule_from_exec", "round_schedule_from_overlap",
+           "round_schedule_from_stream",
            "round_schedule_of", "simulate_schedule"]
 
 
@@ -488,6 +489,37 @@ def round_schedule_from_overlap(ov: OverlappedExec,
                          peak_arena_blocks=peak_arena_blocks(ov))
 
 
+def round_schedule_from_stream(st, plan: CommPlan) -> RoundSchedule:
+    """Flatten the uniform round-stream tables (``core/stream.py``'s
+    :class:`~.stream.StreamTables`) to the executed timeline: real comm
+    lanes per round (the stream's padded ring-shift lanes ship garbage
+    into the trash block and are not algorithmic traffic — the same
+    accounting rule the coalesced overlapped rounds already use for
+    their padded lanes) and GEMM/diagonal flops at the boundaries the
+    phase flags fire them. The stream replays the overlapped
+    :class:`~.plan.GlobalRound` list round-for-round, so this equals
+    :func:`round_schedule_from_overlap` of the same plan (tested) —
+    derived from the stream's own tables/metadata, not from the object
+    it was lowered from, so simulated bytes stay pinned to what
+    executes."""
+    from .stream import COMP_DIAGW, COMP_GEMM
+
+    events: List[Tuple[str, object]] = []
+    for t in range(st.steps):
+        for j in range(st.comp_kind.shape[1]):
+            k = int(st.comp_kind[t, j])
+            if k in (COMP_GEMM, COMP_DIAGW):
+                Ks = st.level_Ks[int(st.comp_level[t, j])]
+                events.append(("comp", _level_task_flops(
+                    plan, Ks, "gemm" if k == COMP_GEMM else "diag")))
+        if t < st.nrounds and st.lane_edges[t]:
+            events.append(("comm", [(s, d, kind, nb_)
+                                    for (s, d, kind, _lv, nb_)
+                                    in st.lane_edges[t]]))
+    return RoundSchedule(nranks=st.pr * st.pc, events=events,
+                         peak_arena_blocks=st.peak_blocks)
+
+
 def round_schedule_of(prog_or_engine) -> RoundSchedule:
     """Flatten a compiled program to its executed timeline, deriving
     everything from the object itself: accepts a
@@ -496,6 +528,8 @@ def round_schedule_of(prog_or_engine) -> RoundSchedule:
     :class:`RoundSchedule` from whichever lowering it compiled — no more
     hand-passing the (exec, plan) pair the program already owns."""
     prog = getattr(prog_or_engine, "program", prog_or_engine)
+    if getattr(prog, "stream_tables", None) is not None:
+        return round_schedule_from_stream(prog.stream_tables, prog.plan)
     if getattr(prog, "overlap_plan", None) is not None:
         return round_schedule_from_overlap(prog.overlap_plan, prog.plan)
     if getattr(prog, "exec_plan", None) is not None:

@@ -1,0 +1,346 @@
+"""Stream lowering — the uniform round-stream form of the overlapped
+sweep, executable as ONE ``lax.fori_loop`` body.
+
+The overlapped executor (``plan.schedule_overlapped`` +
+``pselinv_dist.make_sweep_overlapped``) replays its global
+:class:`~.plan.GlobalRound` list by unrolling a Python loop: every round
+contributes its own ``lax.ppermute`` (a *static* perm) plus per-round
+gather/scatter constants, so jaxpr/HLO size and trace+compile time grow
+linearly with the round count — the binding constraint on scaling ``nb``
+and grid size. This module lowers a compiled :class:`~.plan.OverlappedExec`
+once more, into **uniform-width, round-indexed device tables**
+(:class:`StreamTables`): every per-round quantity is stacked on a leading
+round axis and padded to the stream-wide maximum width, so a single loop
+body driven by ``dynamic_slice`` on the round axis executes the entire
+sweep — comm lanes, owner-local copies, and the level GEMM / write /
+S-einsum / diagonal phases behind per-round phase flags.
+
+**Permute encoding (the one static-shape obstacle).** ``lax.ppermute``
+takes a static perm, but the overlapped stream's perm differs per round.
+The encoding chosen here composes each round from a small fixed set of
+**ring shifts**: within one round every device sends to at most one
+destination and receives from at most one source (the ppermute
+constraint), so each (src, dst) pair belongs to exactly one ring offset
+``(dst - src) mod P``, a round is a disjoint union of subsets of the
+``len(shifts)`` full-ring permutes (one per offset *used anywhere* in
+the stream), and — crucially — the per-round lane tables collapse to
+``[round, device, lane]``, not ``[round, shift, device, lane]``: a
+device gathers its one outgoing lane stack, ships it on *every* shift's
+ring permute, and each receiver keeps only the arrival of its one
+receive shift (``recv_shift``) and scatters it once — the same
+gather-snapshot → permute → scatter semantics as the unrolled round,
+hence bit-identical (padded lanes scatter into the trash block exactly
+like the unrolled executor's coalescing padding). The tradeoff
+(recorded in the ROADMAP PR-5 note): the loop body issues
+``len(shifts)`` permutes per round instead of one, shipping every
+device's payload on every shift — more wire bytes per executed round —
+in exchange for a program whose size is **independent of the round
+count** (the tables are data, not code). Byte *accounting* stays at the
+algorithmic-lane level, exactly as the overlapped stream's (padded
+lanes of a coalesced permute were never counted either):
+``simulator.round_schedule_from_stream`` derives the timeline from the
+same real lanes, so simulated bytes still equal executed bytes.
+
+**Compute encoding.** Round boundary ``t`` fires the compute ops the
+dependence scheduler pinned there (``OverlappedExec.compute_at[t]``, in
+dependence order). The stream gives every boundary the same fixed number
+of compute *slots* (the stream-wide maximum); each slot holds a
+(kind, level) pair — kind 0 is a no-op — dispatched through one
+``lax.switch`` whose branches dynamic-index **level-stacked** mask/index
+tables padded to the widest level ``NK``. Padded supernode rows carry a
+zero struct mask (their GEMM/S rows compute exact zeros into the shared
+partial/S regions' tail, which only the masked readers ever touch) and
+their diagonal lanes target the trash block, so padding is numerically
+inert — the executed arithmetic on real rows is the unrolled executor's,
+value for value.
+
+The lowering is pure host-side table construction (numpy); the executor
+lives in ``pselinv_dist.make_sweep_stream`` and the end-to-end wiring in
+``PlanOptions(stream=True)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .plan import OverlappedExec, peak_arena_blocks
+
+__all__ = ["COMP_NOOP", "COMP_GEMM", "COMP_WRITE", "COMP_SCOMP",
+           "COMP_DIAGW", "COMP_KIND_ID", "StreamTables", "lower_stream",
+           "decode_round_lanes", "decode_local_lanes"]
+
+#: compute-slot kind ids of the per-boundary phase flags (0 = no-op slot)
+COMP_NOOP, COMP_GEMM, COMP_WRITE, COMP_SCOMP, COMP_DIAGW = range(5)
+COMP_KIND_ID: Dict[str, int] = {"gemm": COMP_GEMM, "write": COMP_WRITE,
+                                "scomp": COMP_SCOMP, "diagw": COMP_DIAGW}
+
+
+@dataclass
+class StreamTables:
+    """The uniform round-stream compilation of one overlapped sweep:
+    every per-round table of the :class:`~.plan.GlobalRound` list stacked
+    on a leading round axis (padded to the stream-wide widths), plus the
+    level compute tables stacked on a level axis (padded to ``NK``).
+
+    Geometry mirrors :class:`~.plan.OverlappedExec` (same arena layout,
+    same trash block, same shared partial/S regions at ``base_p`` /
+    ``base_s`` — asserted identical across levels at lowering time).
+    ``shifts`` is the static ring-offset set. Comm tables are indexed
+    ``[round, device, lane]`` — NOT per shift: within one round a device
+    sends on at most one shift and receives on at most one (the ppermute
+    constraint), so the sender tables (``gather``/``glh``) describe the
+    device's single outgoing lane stack (shipped on *every* shift's ring
+    permute — only the true destination keeps it), ``recv_shift`` names
+    the one shift a device receives on (-1 = none), and the receiver
+    tables (``scatter``/``addm``/``tmask``) describe where that single
+    arrival lands. A lane is *real* iff its receiver scatter slot is not
+    the trash block.
+    ``comp_kind``/``comp_level`` hold each boundary's compute slots in
+    dependence order (:data:`COMP_KIND_ID`; 0-filled tails are no-ops).
+    ``steps = nrounds + 1`` is the ``fori_loop`` trip count — the final
+    iteration runs only the last boundary's compute (its comm tables are
+    all-trash no-ops).
+
+    ``lane_edges``/``lmoves``/``level_Ks``/``peak_blocks`` are host-side
+    metadata for byte accounting and the replay tests — never shipped to
+    the device."""
+    nb: int
+    pr: int
+    pc: int
+    n_ainv: int
+    arena_blocks: int
+    trash: int
+    base_p: int
+    base_s: int
+    nrounds: int
+    steps: int
+    shifts: Tuple[int, ...]
+    W: int                         # comm lane width (max over rounds)
+    LW: int                        # owner-local lane width
+    C: int                         # compute slots per boundary
+    NK: int                        # widest level's supernode count
+    window: int | None
+    peak_blocks: int
+    diag_set_root: np.ndarray
+    diag_set_slot: np.ndarray
+    # ---- (steps, P, W) comm lane tables + (steps, P) receive shift ----
+    gather: np.ndarray
+    scatter: np.ndarray
+    addm: np.ndarray
+    tmask: np.ndarray
+    glh: np.ndarray
+    recv_shift: np.ndarray
+    # ---- (steps, P, LW) owner-local lane tables -----------------------
+    lgather: np.ndarray
+    lscatter: np.ndarray
+    ltmask: np.ndarray
+    lglh: np.ndarray
+    # ---- (steps, C) compute phase flags -------------------------------
+    comp_kind: np.ndarray
+    comp_level: np.ndarray
+    # ---- (nlev, ...) level compute tables padded to NK ----------------
+    u_gather: np.ndarray           # (nlev, P, NK*nbc), trash-padded
+    cmask: np.ndarray              # (nlev, pc, NK, nbc), zero-padded
+    kcs: np.ndarray                # (nlev, NK)
+    krs: np.ndarray                # (nlev, NK)
+    col_write_row: np.ndarray      # (nlev, pr, NK, nbr)
+    col_write_col: np.ndarray      # (nlev, pc, NK)
+    diag_rowmask: np.ndarray       # (nlev, pr, NK)
+    diag_root: np.ndarray          # (nlev, NK), -1-padded (matches no id)
+    diag_slot: np.ndarray          # (nlev, NK), trash-padded
+    # ---- host-side metadata (accounting / replay tests) ---------------
+    level_Ks: List[np.ndarray] = field(default_factory=list)
+    lane_edges: List[List[Tuple[int, int, str, int, float]]] = \
+        field(default_factory=list)
+    lmoves: List[List[Tuple[int, str, int]]] = field(default_factory=list)
+
+    @property
+    def nbr(self) -> int:
+        return self.nb // self.pr
+
+    @property
+    def nbc(self) -> int:
+        return self.nb // self.pc
+
+    @property
+    def nlev(self) -> int:
+        return len(self.level_Ks)
+
+
+def lower_stream(ov: OverlappedExec) -> StreamTables:
+    """Lower a compiled overlapped round stream into the uniform
+    round-indexed device tables of :class:`StreamTables`.
+
+    Pure table construction: the stream replays the *identical* round
+    order, lane order, and accumulation order as the unrolled
+    :class:`~.plan.GlobalRound` list (the replay property test in
+    ``tests/test_stream.py`` proves it round-for-round), so the executed
+    f64 output is bit-identical to ``make_sweep_overlapped``'s."""
+    P = ov.pr * ov.pc
+    nrounds = len(ov.rounds)
+    steps = nrounds + 1
+    shifts = tuple(sorted({(d - s) % P
+                           for rnd in ov.rounds for (s, d) in rnd.perm}))
+    if 0 in shifts:
+        raise ValueError("overlapped stream contains a self-edge "
+                         "(src == dst) — those must be owner-local lanes")
+    sidx = {delta: i for i, delta in enumerate(shifts)}
+    S = len(shifts)
+    W = max((rnd.width for rnd in ov.rounds), default=0)
+    LW = max((rnd.lwidth for rnd in ov.rounds), default=0)
+    C = max((len(ops) for ops in ov.compute_at), default=0)
+    trash = ov.trash
+
+    gather = np.zeros((steps, P, W), np.int32)
+    scatter = np.full((steps, P, W), trash, np.int32)
+    addm = np.zeros((steps, P, W), np.float32)
+    tmask = np.zeros((steps, P, W), bool)
+    glh = np.zeros((steps, P, W), bool)
+    recv_shift = np.full((steps, P), -1, np.int32)
+    lgather = np.zeros((steps, P, LW), np.int32)
+    lscatter = np.full((steps, P, LW), trash, np.int32)
+    ltmask = np.zeros((steps, P, LW), bool)
+    lglh = np.zeros((steps, P, LW), bool)
+
+    for t, rnd in enumerate(ov.rounds):
+        for (s, d) in rnd.perm:
+            # the ppermute constraint (unique sources / destinations per
+            # round) is what makes the collapsed [round, device, lane]
+            # layout lossless: one outgoing stack, one receive shift
+            if recv_shift[t, d] != -1:
+                raise ValueError(
+                    f"round {t}: device {d} receives twice — the "
+                    "overlapped round violates the ppermute constraint")
+            w = rnd.width
+            gather[t, s, :w] = rnd.gather[s]
+            glh[t, s, :w] = rnd.glh[s]
+            scatter[t, d, :w] = rnd.scatter[d]
+            addm[t, d, :w] = rnd.addm[d]
+            tmask[t, d, :w] = rnd.tmask[d]
+            recv_shift[t, d] = sidx[(d - s) % P]
+        if rnd.lwidth:
+            lw = rnd.lwidth
+            lgather[t, :, :lw] = rnd.lgather
+            lscatter[t, :, :lw] = rnd.lscatter
+            ltmask[t, :, :lw] = rnd.ltmask
+            lglh[t, :, :lw] = rnd.lglh
+
+    comp_kind = np.zeros((steps, max(C, 1)), np.int32)
+    comp_level = np.zeros((steps, max(C, 1)), np.int32)
+    for t, ops in enumerate(ov.compute_at):
+        for j, op in enumerate(ops):
+            comp_kind[t, j] = COMP_KIND_ID[op.kind]
+            comp_level[t, j] = op.level
+
+    # ---- level compute tables, padded to the widest level -------------
+    nlev = len(ov.levels)
+    nbr, nbc = ov.nbr, ov.nbc
+    NK = max((len(lv.Ks) for lv in ov.levels), default=0)
+    if nlev:
+        # the shared partial/S regions are one address each across every
+        # level (PR 3); the stream's static base offsets rely on it
+        base_p = ov.levels[0].base_p
+        base_s = ov.levels[0].base_s
+        if any(lv.base_p != base_p or lv.base_s != base_s
+               for lv in ov.levels):
+            raise ValueError("overlapped levels disagree on the shared "
+                             "partial/S region bases — the stream "
+                             "lowering requires the PR-3 single-region "
+                             "arena layout")
+        if base_s - base_p != NK * nbr or trash - base_s != NK:
+            raise ValueError(
+                f"shared region extents (partial={base_s - base_p}, "
+                f"S={trash - base_s}) do not match the widest level "
+                f"(NK={NK}) — padded compute rows would escape them")
+    else:
+        base_p = base_s = ov.n_ainv
+
+    u_gather = np.full((nlev, P, NK * nbc), trash, np.int32)
+    cmask = np.zeros((nlev, ov.pc, NK, nbc))
+    kcs = np.zeros((nlev, NK), np.int32)
+    krs = np.zeros((nlev, NK), np.int32)
+    col_write_row = np.zeros((nlev, ov.pr, NK, nbr))
+    col_write_col = np.zeros((nlev, ov.pc, NK))
+    diag_rowmask = np.zeros((nlev, ov.pr, NK))
+    diag_root = np.full((nlev, NK), -1, np.int32)
+    diag_slot = np.full((nlev, NK), trash, np.int32)
+    for L, lv in enumerate(ov.levels):
+        nk = len(lv.Ks)
+        u_gather[L, :, :nk * nbc] = lv.u_gather
+        cmask[L, :, :nk] = lv.cmask
+        kcs[L, :nk] = lv.kcs
+        krs[L, :nk] = lv.krs
+        col_write_row[L, :, :nk] = lv.col_write_row
+        col_write_col[L, :, :nk] = lv.col_write_col
+        diag_rowmask[L, :, :nk] = lv.diag_rowmask
+        diag_root[L, :nk] = lv.diag_root
+        diag_slot[L, :nk] = lv.diag_slot
+
+    return StreamTables(
+        nb=ov.nb, pr=ov.pr, pc=ov.pc, n_ainv=ov.n_ainv,
+        arena_blocks=ov.arena_blocks, trash=trash,
+        base_p=base_p, base_s=base_s,
+        nrounds=nrounds, steps=steps, shifts=shifts,
+        W=W, LW=LW, C=C, NK=NK, window=ov.window,
+        peak_blocks=peak_arena_blocks(ov),
+        diag_set_root=ov.diag_set_root, diag_set_slot=ov.diag_set_slot,
+        gather=gather, scatter=scatter, addm=addm, tmask=tmask, glh=glh,
+        recv_shift=recv_shift,
+        lgather=lgather, lscatter=lscatter, ltmask=ltmask, lglh=lglh,
+        comp_kind=comp_kind, comp_level=comp_level,
+        u_gather=u_gather, cmask=cmask, kcs=kcs, krs=krs,
+        col_write_row=col_write_row, col_write_col=col_write_col,
+        diag_rowmask=diag_rowmask, diag_root=diag_root,
+        diag_slot=diag_slot,
+        level_Ks=[np.asarray(lv.Ks) for lv in ov.levels],
+        lane_edges=[list(rnd.edges) for rnd in ov.rounds],
+        lmoves=[list(rnd.lmoves) for rnd in ov.rounds])
+
+
+def decode_round_lanes(st: StreamTables, t: int
+                       ) -> List[Tuple[int, int, int, int, float, bool,
+                                       bool]]:
+    """Reconstruct round ``t``'s *real* comm lanes from the device tables
+    alone (no ``lane_edges`` metadata): one
+    (src, dst, gather_slot, scatter_slot, addm, transpose, from_lh) tuple
+    per lane whose receiver scatter slot is not the trash block: a
+    receiver's one arrival comes from the device ``recv_shift`` steps
+    behind it on the ring. The replay property test compares this
+    against the overlapped :class:`~.plan.GlobalRound` the round was
+    lowered from."""
+    P = st.pr * st.pc
+    out = []
+    for d in range(P):
+        si = int(st.recv_shift[t, d])
+        if si < 0:
+            continue
+        s = (d - st.shifts[si]) % P
+        for j in range(st.W):
+            ds = int(st.scatter[t, d, j])
+            if ds == st.trash:
+                continue
+            out.append((s, d, int(st.gather[t, s, j]), ds,
+                        float(st.addm[t, d, j]),
+                        bool(st.tmask[t, d, j]),
+                        bool(st.glh[t, s, j])))
+    return out
+
+
+def decode_local_lanes(st: StreamTables, t: int
+                       ) -> List[Tuple[int, int, int, bool, bool]]:
+    """Round ``t``'s real owner-local lanes from the device tables:
+    (device, gather_slot, scatter_slot, transpose, from_lh) per non-trash
+    scatter."""
+    P = st.pr * st.pc
+    out = []
+    for dev in range(P):
+        for j in range(st.LW):
+            ds = int(st.lscatter[t, dev, j])
+            if ds == st.trash:
+                continue
+            out.append((dev, int(st.lgather[t, dev, j]), ds,
+                        bool(st.ltmask[t, dev, j]),
+                        bool(st.lglh[t, dev, j])))
+    return out
