@@ -12,10 +12,14 @@ footprints (with the copy-free L̂ gathers the overlapped arena must stay
 within 1.1× of the level-serial executor's transient peak — it lands
 *below* it). The stream section records
 ``selinv/stream_compile_ms``/``stream_hlo_bytes``/``stream_us_per_call``
-and asserts the stream program's HLO text is ≤ 0.5× the unrolled
-overlapped program's (the whole point: program size independent of the
-round count) while staying bit-identical in the f32 run (≤1e-4
-asserted; tests assert ≤1e-12 in f64). The engine section records
+plus the grid-factored wire metrics
+``selinv/stream_wire_bytes``/``stream_shifts_per_round``, and asserts
+the stream program's HLO text is ≤ 0.5× the unrolled overlapped
+program's (the whole point: program size independent of the round
+count) *and* its gated executed wire bytes are ≤ 2× the unrolled
+overlapped executor's (the flat ring of PR 5 paid ~36× here) while
+staying bit-identical in the f32 run (≤1e-4 asserted; tests assert
+≤1e-12 in f64). The engine section records
 multi-matrix batched solve throughput
 (``selinv/solve_batched_us_per_matrix_b{1,4,16}``), the speedup of one
 batched B=16 solve over sequential ``run_distributed`` calls (asserted
@@ -174,6 +178,30 @@ def _ir_compare_child(full: bool):
     csv_row("selinv/stream_hlo_bytes", float(hlo_bytes["stream"]),
             f"nb={nb} overlap_hlo_bytes={hlo_bytes['overlap']}")
     assert hlo_bytes["stream"] <= 0.5 * hlo_bytes["overlap"], hlo_bytes
+    # ...and its wire must be near-unrolled: the grid-factored shift
+    # scheduling gates each round to only its active comm slots, so the
+    # executed wire bytes (engine stats == simulator accounting) land
+    # within 2× of the unrolled overlapped executor's, where the PR-5
+    # flat ring shipped every device's lane stack on every shift of
+    # every round (~36× unrolled at this grid)
+    from repro.core.schedule import BYTES_PER_ELT
+    from repro.core.simulator import executed_wire_bytes
+    from repro.core.stream import overlap_wire_blocks
+    st_eng = engines["stream"]
+    s_stats = st_eng.stats()
+    wire_stream = s_stats["stream_wire_bytes"]
+    assert executed_wire_bytes(st_eng) == wire_stream
+    wire_unrolled = (overlap_wire_blocks(st_eng.program.overlap_plan)
+                     * b * b * BYTES_PER_ELT)
+    csv_row("selinv/stream_wire_bytes", wire_stream,
+            f"nb={nb} unrolled={wire_unrolled:.0f} "
+            f"ratio={wire_stream / wire_unrolled:.2f}")
+    csv_row("selinv/stream_shifts_per_round",
+            s_stats["stream_shifts_per_round"],
+            f"nb={nb} "
+            f"nshifts={len(st_eng.program.stream_tables.shifts)}")
+    assert wire_stream <= 2.0 * wire_unrolled, (wire_stream,
+                                                wire_unrolled)
     csv_row("selinv/sweep_ppermute_rounds", float(rounds["overlap"]),
             f"nb={nb} serial={rounds['ir']} overlap={rounds['overlap']}")
     assert rounds["overlap"] < rounds["ir"], rounds
@@ -202,8 +230,11 @@ def _engine_batched_bench(A, b, pr, pc, nb, eng, run_distributed):
     per_matrix = {}
     for B in (1, 4, 16):
         vb = stack_values([vals] * B)
+        # best-of-reps: the ≥5× assert below is a ratio of two timings
+        # on a possibly starved host (8 simulated devices share the
+        # box), and one descheduled rep at mean-of-3 has flipped it
         _, dt = timed(lambda: jax.block_until_ready(
-            eng.solve(vb, dtype=jnp.float32)), reps=3)
+            eng.solve(vb, dtype=jnp.float32)), reps=5, best=True)
         per_matrix[B] = dt / B
         csv_row(f"selinv/solve_batched_us_per_matrix_b{B}",
                 dt / B * 1e6, f"nb={nb} B={B}")
@@ -211,7 +242,7 @@ def _engine_batched_bench(A, b, pr, pc, nb, eng, run_distributed):
     # (structure-cache warm — the 5× bar is about the per-call host
     # factorization + dispatch the batched path amortizes away)
     _, dt_seq = timed(lambda: run_distributed(
-        A, b=b, pr=pr, pc=pc, dtype=jnp.float32), reps=2)
+        A, b=b, pr=pr, pc=pc, dtype=jnp.float32), reps=3, best=True)
     speedup = dt_seq / per_matrix[16]
     csv_row("selinv/engine_batched_speedup", speedup,
             f"nb={nb} B=16 seq_us={dt_seq * 1e6:.1f} "

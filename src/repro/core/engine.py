@@ -329,9 +329,14 @@ class PSelInvEngine:
 
     def stats(self, compile: bool = False) -> Dict[str, float]:
         """Static schedule metrics of the cached program: ppermute round
-        count and peak per-device arena footprint (blocks).
-        ``compile=True`` additionally reports compile metrics for the
-        f32 single-matrix shape class (:meth:`compile_stats` —
+        count and peak per-device arena footprint (blocks). Stream
+        sessions additionally report their executed wire traffic —
+        ``stream_wire_bytes`` (physical permute bytes per sweep from the
+        gated slot tables, padding included) and
+        ``stream_shifts_per_round`` (mean gated permutes executed per
+        comm round) — the two numbers the grid-factored encoding exists
+        to shrink. ``compile=True`` additionally reports compile metrics
+        for the f32 single-matrix shape class (:meth:`compile_stats` —
         trace+lower / compile wall time, jaxpr line count, HLO text
         size), so the stream's compile-time/program-size win is
         inspectable straight off the session; call
@@ -340,6 +345,11 @@ class PSelInvEngine:
               else self.program.exec_plan)
         out = {"ppermute_rounds": ppermute_round_count(ex),
                "peak_arena_blocks": peak_arena_blocks(ex)}
+        if self.options.stream:
+            from .stream import stream_shifts_per_round, stream_wire_bytes
+            st = self.program.stream_tables
+            out["stream_wire_bytes"] = stream_wire_bytes(st, self.b)
+            out["stream_shifts_per_round"] = stream_shifts_per_round(st)
         if compile:
             out.update(self.compile_stats())
         return out

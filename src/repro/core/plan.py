@@ -74,7 +74,8 @@ import numpy as np
 from .schedule import (BYTES_PER_ELT, CommEvent, ComputeTask, Grid2D,
                        pselinv_events)
 from .symbolic import BlockStructure
-from .trees import CommTree, TreeKind, build_tree, cached_tree, stable_hash
+from .trees import (HYBRID_FLAT_MAX, CommTree, TreeKind, build_tree,
+                    cached_tree, stable_hash)
 
 __all__ = [
     "PlanOptions", "PlanOp", "CommPlan", "build_plan", "tree_for",
@@ -109,12 +110,30 @@ class PlanOptions:
     of ``core/stream.py`` and execute the whole sweep as one
     ``lax.fori_loop`` body (program size independent of the round count
     — the same rounds, replayed from tables instead of unrolled code;
-    requires ``overlap=True``)."""
+    requires ``overlap=True``).
+
+    ``axis_factored``: encode stream communication over the ``(pr, pc)``
+    grid torus instead of the flat device ring — the packer groups
+    equal-priority lanes by their grid offset ``(dr, dc)`` so lanes
+    sharing an offset land in the same round, and the stream lowering
+    emits per-(offset, width) comm *slots* gated by a per-round
+    active-slot mask (``core/stream.py``); each round then pays only
+    the wire bytes of the slots it actually uses, instead of shipping
+    every device's payload on every ring shift of the whole sweep
+    (the PR-5 flat-ring behavior, recovered with ``False``).
+    ``shift_budget``: optional cap on the stream's comm-slot dictionary
+    — exact-width slots are coarsened (power-of-two width classes, then
+    one slot per grid offset) until the cap is met, trading wire bytes
+    back for fewer gated permutes in the loop body. Requires
+    ``axis_factored=True`` (the flat-ring lowering has exactly one slot
+    per ring shift already)."""
     kind: TreeKind = TreeKind.SHIFTED
     overlap: bool = True
     coalesce_max: int = 8
     window: int | None = None
     stream: bool = False
+    axis_factored: bool = True
+    shift_budget: int | None = None
 
     def __post_init__(self):
         if self.stream and not self.overlap:
@@ -122,6 +141,16 @@ class PlanOptions:
                 "PlanOptions(stream=True) lowers the *overlapped* round "
                 "stream — it requires overlap=True (the level-serial "
                 "executor has no global round stream to lower)")
+        if self.shift_budget is not None:
+            if not self.axis_factored:
+                raise ValueError(
+                    "PlanOptions(shift_budget=...) coarsens the "
+                    "axis-factored slot dictionary — it requires "
+                    "axis_factored=True (the flat-ring lowering has one "
+                    "slot per ring shift already)")
+            if self.shift_budget < 1:
+                raise ValueError(
+                    f"shift_budget must be >= 1, got {self.shift_budget}")
 
 
 # ---------------------------------------------------------------------------
@@ -132,8 +161,15 @@ def tree_for(kind: TreeKind, root: int, participants: Sequence[int],
              tag: int) -> CommTree:
     """The canonical collective → tree lowering. FLAT/BINARY trees depend
     only on the participant set (memoized); SHIFTED/HYBRID decorrelate
-    concurrent collectives through the tag-seeded rotation."""
+    concurrent collectives through the tag-seeded rotation. HYBRID is the
+    paper's §4.2 per-collective dispatch keyed on participant count: at
+    or below :data:`~.trees.HYBRID_FLAT_MAX` participants the collective
+    is a flat tree — tag-independent, so it routes through the memoized
+    FLAT path instead of rebuilding per tag — and above it the tag-seeded
+    shifted-binary tree."""
     receivers = tuple(r for r in participants if r != root)
+    if kind is TreeKind.HYBRID and len(receivers) + 1 <= HYBRID_FLAT_MAX:
+        kind = TreeKind.FLAT
     if kind in (TreeKind.FLAT, TreeKind.BINARY):
         return cached_tree(kind.value, root, receivers, 0)
     return build_tree(kind, root, receivers, tag=tag)
@@ -1183,6 +1219,7 @@ def _overlap_items(plan: CommPlan, window: int | None = None
 
 def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
                         window: int | None = None, *,
+                        axis_factored: bool = True,
                         options: PlanOptions | None = None
                         ) -> OverlappedExec:
     """Compile the IR into the cross-level overlapped executable form.
@@ -1218,9 +1255,19 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
     unthrottled round count while compaction + partial/S recycling + the
     copy-free L̂ gathers hold the peak footprint *below* the
     level-serial executor's (~0.9×; :func:`peak_arena_blocks`, asserted
-    ≤1.1× in the bench and strictly below serial in the tests)."""
+    ≤1.1× in the bench and strictly below serial in the tests).
+
+    Shift-aware packing (``axis_factored``, the default): equal-priority
+    ready edges are grouped by their grid-torus offset
+    ``(dr, dc) = ((dst_r - src_r) mod pr, (dst_c - src_c) mod pc)``
+    before packing, so lanes that share an offset land in the same round
+    whenever the critical-path order allows it. The (level, phase)
+    priority still dominates — the critical path is untouched — but the
+    per-round *distinct-offset* count shrinks, which is what the
+    gated stream lowering (``core/stream.py``) pays wire for."""
     if options is not None:
         coalesce_max, window = options.coalesce_max, options.window
+        axis_factored = options.axis_factored
     grid = plan.grid
     P = grid.size
     items, levels, N, arena_blocks = _overlap_items(plan, window=window)
@@ -1262,9 +1309,26 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
         if not remaining:
             break
 
+        if axis_factored:
+            # group equal-(level, phase) edges by grid-torus offset: the
+            # insertion-order tiebreak moves *behind* the offset so lanes
+            # sharing an offset pack into the same round — fewer distinct
+            # offsets per round means fewer gated permutes (and fewer
+            # executed wire bytes) in the stream lowering
+            def _key(i):
+                it = items[i]
+                L, ph, order = it.prio
+                if it.local:
+                    return (L, ph, (-1, -1), order)
+                dr = (it.dst // grid.pc - it.src // grid.pc) % grid.pr
+                dc = (it.dst % grid.pc - it.src % grid.pc) % grid.pc
+                return (L, ph, (dr, dc), order)
+        else:
+            def _key(i):
+                return items[i].prio
         ready = sorted((i for i in remaining
                         if not items[i].compute and _deps_met(i, t)),
-                       key=lambda i: items[i].prio)
+                       key=_key)
         pair_lanes: Dict[Tuple[int, int], List[int]] = {}
         used_src: set = set()
         used_dst: set = set()
@@ -1364,6 +1428,8 @@ def schedule_overlapped(plan: CommPlan, coalesce_max: int = 8,
 
 def schedule_stream(plan: CommPlan, coalesce_max: int = 8,
                     window: int | None = None, *,
+                    axis_factored: bool = True,
+                    shift_budget: int | None = None,
                     options: PlanOptions | None = None):
     """Compile the IR into the **uniform round-stream** executable form:
     the overlapped lowering of :func:`schedule_overlapped`, lowered once
@@ -1373,8 +1439,15 @@ def schedule_stream(plan: CommPlan, coalesce_max: int = 8,
     count. Returns ``(OverlappedExec, StreamTables)``: the overlapped
     object stays the source of truth for round counts, byte accounting
     and the arena footprint; the tables are what the device executes
-    (``pselinv_dist.make_sweep_stream``)."""
+    (``pselinv_dist.make_sweep_stream``). ``axis_factored`` /
+    ``shift_budget`` select the grid-factored gated-slot comm encoding
+    (see :class:`PlanOptions`); the ``options`` bundle overrides both."""
     from .stream import lower_stream
+    if options is not None:
+        axis_factored = options.axis_factored
+        shift_budget = options.shift_budget
     ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
-                             window=window, options=options)
-    return ov, lower_stream(ov)
+                             window=window, axis_factored=axis_factored,
+                             options=options)
+    return ov, lower_stream(ov, axis_factored=axis_factored,
+                            shift_budget=shift_budget)

@@ -138,10 +138,10 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     ov = st = None
     if stream:
         ov, st = schedule_stream(plan, coalesce_max=coalesce_max,
-                                 window=window)
+                                 window=window, options=options)
     elif overlap:
         ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
-                                 window=window)
+                                 window=window, options=options)
     return PSelInvProgram(
         nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
         exec_plan=None if overlap else compile_exec(plan),
@@ -530,17 +530,22 @@ def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
     level GEMM / column write / S-einsum / diagonal write behind
     per-round phase flags, one ``lax.switch`` per slot whose branches
     dynamic-index the level-stacked tables — (b) applies the owner-local
-    copy lanes, and (c) issues one *static* full-ring ``ppermute`` per
-    used mesh shift, with per-round ``dynamic_slice``-selected
-    gather/scatter/accumulate/transpose/L̂-gather lane tables (padded
-    lanes scatter into the trash block, exactly like the unrolled
-    executor's coalescing padding). The replayed round order, lane order
-    and accumulation order are identical to
-    :func:`make_sweep_overlapped`'s, so the f64 output is bit-identical
-    — but jaxpr/HLO size no longer grows with the round count: the
-    rounds are data (a few stacked tables), not code. Call under
-    shard_map exactly like :func:`make_sweep`; ``batched=True`` builds
-    the multi-matrix variant."""
+    copy lanes, and (c) runs the grid-factored comm-slot dictionary of
+    ``core/stream.py``: one *static* ``ppermute`` per comm slot (a
+    single grid-torus offset's pair union at one lane width), each gated
+    by the round's ``slot_active`` mask through ``lax.cond`` so an
+    inactive slot ships nothing, with per-round
+    ``dynamic_slice``-selected gather/scatter/accumulate/transpose/
+    L̂-gather lane tables (padded lanes scatter into the trash block,
+    exactly like the unrolled executor's coalescing padding; a gated-off
+    slot's zero arrival is never selected — no device receives on an
+    inactive slot). The replayed round order, lane order and
+    accumulation order are identical to :func:`make_sweep_overlapped`'s,
+    so the f64 output is bit-identical — but jaxpr/HLO size no longer
+    grows with the round count: the rounds are data (a few stacked
+    tables), not code, and a round pays wire only for the slots it
+    actually uses. Call under shard_map exactly like :func:`make_sweep`;
+    ``batched=True`` builds the multi-matrix variant."""
     st = prog.stream_tables
     assert st is not None, \
         "build_program(..., options=PlanOptions(stream=True)) first"
@@ -550,9 +555,10 @@ def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
     nbr, nbc = st.nbr, st.nbc
     N = st.n_ainv
     NK = st.NK
-    S = len(st.shifts)
-    perms = [[(i, (i + delta) % P) for i in range(P)]
-             for delta in st.shifts]
+    S = st.nslots
+    slot_perms = [[(int(s), int(d)) for (s, d) in perm]
+                  for perm in st.slot_perm]
+    slot_w = [int(w) for w in st.slot_width]
     # static whole-table checks: streams/locals that never carry an
     # L̂-gathering lane skip the second gather entirely
     comm_any_lh = bool(st.glh.any()) if S else False
@@ -582,7 +588,8 @@ def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
         AM = jnp.asarray(st.addm, dtype=dtype)
         TM = jnp.asarray(st.tmask)
         GLH = jnp.asarray(st.glh)
-        RSH = jnp.asarray(st.recv_shift)
+        RSL = jnp.asarray(st.recv_slot)
+        ACT = jnp.asarray(st.slot_active)
         LG = jnp.asarray(st.lgather)
         LS = jnp.asarray(st.lscatter)
         LT = jnp.asarray(st.ltmask)
@@ -661,19 +668,31 @@ def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
                                  jnp.swapaxes(blks, -1, -2), blks)
                 arena = arena.at[ls].set(blks, mode="promise_in_bounds")
             # (c) comm: the device's one outgoing lane stack is gathered
-            # once and shipped on EVERY used ring shift (static perms);
-            # each receiver keeps only the arrival of its one receive
-            # shift and scatters it once — identical snapshot semantics
-            # to the unrolled round's single gather/permute/scatter
+            # once; each comm slot — gated by the round's active mask —
+            # ships the stack's leading slot_width lanes along its
+            # static union perm, and each receiver keeps only the
+            # arrival of its one receive slot and scatters it once —
+            # identical snapshot semantics to the unrolled round's
+            # single gather/permute/scatter. An inactive slot's cond
+            # ships nothing (zeros branch); no device receives on an
+            # inactive slot, so the zeros are never selected.
             if S:
                 g = jnp.take(at(G, t), idx, axis=0)      # (W,)
                 lh = jnp.take(at(GLH, t), idx, axis=0)
                 payload = _gather_lanes(arena, Lh_f, g, lh, comm_any_lh)
-                rsh = jnp.take(at(RSH, t), idx, axis=0)  # scalar
+                rsl = jnp.take(at(RSL, t), idx, axis=0)  # scalar
+                act = at(ACT, t)                         # (S,) bool
                 moved = jnp.zeros_like(payload)
                 for si in range(S):
-                    mv = lax.ppermute(payload, "xy", perms[si])
-                    moved = jnp.where(rsh == si, mv, moved)
+                    w = slot_w[si]
+                    mv = lax.cond(
+                        act[si],
+                        lambda p, perm=slot_perms[si]:
+                            lax.ppermute(p, "xy", perm),
+                        lambda p: jnp.zeros_like(p),
+                        lax.slice_in_dim(payload, 0, w))
+                    moved = moved.at[:w].set(
+                        jnp.where(rsl == si, mv, moved[:w]))
                 tm = jnp.take(at(TM, t), idx, axis=0)
                 moved = jnp.where(tm[:, None, None],
                                   jnp.swapaxes(moved, -1, -2), moved)

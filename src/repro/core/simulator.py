@@ -39,7 +39,8 @@ __all__ = ["NetworkModel", "SimResult", "volumes", "volumes_from_plan",
            "volume_stats", "simulate", "RoundSchedule",
            "round_schedule_from_exec", "round_schedule_from_overlap",
            "round_schedule_from_stream",
-           "round_schedule_of", "simulate_schedule"]
+           "round_schedule_of", "simulate_schedule",
+           "executed_wire_bytes"]
 
 
 @dataclass(frozen=True)
@@ -518,6 +519,55 @@ def round_schedule_from_stream(st, plan: CommPlan) -> RoundSchedule:
                                     in st.lane_edges[t]]))
     return RoundSchedule(nranks=st.pr * st.pc, events=events,
                          peak_arena_blocks=st.peak_blocks)
+
+
+def executed_wire_bytes(prog_or_engine) -> float:
+    """Physical permute traffic of one compiled sweep, in bytes — what
+    the executor's ``ppermute`` ops actually ship, padding included
+    (unlike the algorithmic lane bytes of :class:`RoundSchedule`, which
+    never counted coalescing padding).
+
+    For the uniform round stream this is the *independent* lens of the
+    simulated-equals-executed wire invariant: the per-round active slot
+    sets are re-derived from ``recv_slot`` (which devices receive on
+    which slot), cross-checked against the ``slot_active`` gate table
+    the device program branches on, and only then priced — so a gate
+    table that drifted from the receive table fails loudly instead of
+    producing an agreeing-but-wrong byte count. Must equal
+    ``stream.stream_wire_bytes`` of the same tables (tested, and
+    asserted against the unrolled overlapped executor's wire in the
+    bench). For an unrolled overlapped program it prices each round's
+    single static permute (``len(perm) × width`` blocks)."""
+    prog = getattr(prog_or_engine, "program", prog_or_engine)
+    b = prog.b
+    st = getattr(prog, "stream_tables", None)
+    if st is not None:
+        blocks = 0
+        for t in range(st.steps):
+            derived = {int(si) for si in st.recv_slot[t] if si >= 0}
+            gated = {si for si in range(st.nslots)
+                     if st.slot_active[t, si]}
+            if st.axis_factored and derived != gated:
+                raise ValueError(
+                    f"stream round {t}: slots with receivers "
+                    f"{sorted(derived)} != gated active slots "
+                    f"{sorted(gated)} — the gate table drifted from the "
+                    "receive table")
+            if not derived <= gated:
+                raise ValueError(
+                    f"stream round {t}: device receives on an inactive "
+                    f"slot ({sorted(derived - gated)})")
+            blocks += sum(len(st.slot_perm[si]) * st.slot_width[si]
+                          for si in gated)
+        return float(blocks) * b * b * BYTES_PER_ELT
+    ov = getattr(prog, "overlap_plan", None)
+    if ov is not None:
+        blocks = sum(len(rnd.perm) * rnd.width for rnd in ov.rounds)
+        return float(blocks) * b * b * BYTES_PER_ELT
+    raise ValueError(
+        "executed wire accounting covers the overlapped and stream "
+        "lowerings — compile with PlanOptions(overlap=True) or "
+        "PlanOptions(stream=True)")
 
 
 def round_schedule_of(prog_or_engine) -> RoundSchedule:

@@ -26,7 +26,7 @@ from repro.core import sparse
 from repro.core.plan import (build_plan, compile_exec, etree_levels,
                              exec_byte_counts, merge_round_lists,
                              peak_arena_blocks, ppermute_round_count,
-                             schedule_overlapped)
+                             schedule_overlapped, tree_for)
 from repro.core.schedule import Grid2D
 from repro.core.simulator import (round_schedule_from_overlap,
                                   simulate_schedule, volumes, volumes_fast)
@@ -350,7 +350,7 @@ def test_no_live_generations_alias_a_slot(window):
         _ordered("diagw", "scomp", L)    # next write; same for S region
 
 
-@pytest.mark.parametrize("nx,max_rounds", [(16, 28), (32, 34)])
+@pytest.mark.parametrize("nx,max_rounds", [(16, 28), (32, 35)])
 def test_recycled_arena_peak_and_rounds(nx, max_rounds):
     """The acceptance envelope of the arena recycling + copy-free L̂
     gathers: at grid 4×2 the overlapped executor's peak footprint
@@ -358,8 +358,10 @@ def test_recycled_arena_peak_and_rounds(nx, max_rounds):
     level-serial executor's transient peak (~0.9×; before the copy-free
     gathers it was ~1.2×, before slot recycling ~3× at nb=32) while the
     ppermute round counts hold the coalesced-overlap wins (28 @ nb=16,
-    34 @ nb=32), and the schedule simulator carries the peak so the
-    bench trajectory can regression-guard it."""
+    35 @ nb=32 — the shift-aware packer's offset grouping pays one
+    round here at 4×2 and wins two back at 8×4, for a stream wire cut
+    from ~36× to ~1.6× unrolled), and the schedule simulator carries
+    the peak so the bench trajectory can regression-guard it."""
     bs = symbolic_factorize(
         sp.csr_matrix(sparse.laplacian_2d(nx, 8)), max_supernode=8)
     plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=nx)
@@ -406,6 +408,91 @@ def test_volumes_fast_bit_identical_at_hybrid_boundary(pr, pc, kind):
                                   fast["col-bcast"])
     np.testing.assert_array_equal(out.get("row-reduce", z),
                                   fast["row-reduce"])
+
+
+def test_tree_for_hybrid_participant_dispatch():
+    """``tree_for`` is the per-collective HYBRID dispatch keyed on
+    participant count (paper §4.2): at or below ``HYBRID_FLAT_MAX``
+    participants the collective is the *memoized* flat tree — the very
+    object the FLAT path returns, tag-independent — and one participant
+    above the boundary it becomes the tag-seeded shifted-binary tree
+    with logarithmic depth."""
+    root = 5
+    at_max = tuple(range(HYBRID_FLAT_MAX))            # 24 participants
+    t_h = tree_for(TreeKind.HYBRID, root, at_max, tag=7)
+    t_f = tree_for(TreeKind.FLAT, root, at_max, tag=3)
+    assert t_h is t_f                      # same memoized flat object
+    assert t_h == build_tree(TreeKind.FLAT, root,
+                             [r for r in at_max if r != root])
+    # flat: the root feeds every receiver directly (single fan-out)
+    assert t_h.children == ((root, tuple(r for r in at_max
+                                         if r != root)),)
+    # different tags at/below the boundary: still the one flat tree
+    assert tree_for(TreeKind.HYBRID, root, at_max, tag=11) is t_h
+
+    over = tuple(range(HYBRID_FLAT_MAX + 1))          # 25 participants
+    t_h25 = tree_for(TreeKind.HYBRID, root, over, tag=7)
+    assert t_h25 == build_tree(TreeKind.HYBRID, root,
+                               [r for r in over if r != root], tag=7)
+    # shifted-binary: internal fan-out, logarithmic receive rounds —
+    # strictly shallower than the flat tree's serial send chain
+    assert len(t_h25.children) > 1
+    assert 1 < t_h25.depth() < t_h.depth()
+    # above the boundary the tag decorrelates concurrent collectives
+    assert any(tree_for(TreeKind.HYBRID, root, over, tag=tg) != t_h25
+               for tg in (8, 9, 10))
+
+
+def test_hybrid_kind_bit_identical_below_boundary():
+    """Numeric half of the boundary test: on an 8-device 4×2 grid every
+    collective has ≤ 8 < ``HYBRID_FLAT_MAX`` participants, so a HYBRID
+    plan must lower to the *same rounds* as a FLAT plan and both stream
+    and overlapped executors must produce f64 bit-identical (drift 0.0)
+    results across the kinds."""
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import sparse
+        from repro.core.plan import PlanOptions
+        from repro.core.trees import TreeKind
+        from repro.core.pselinv_dist import (analyze_structure,
+                                             build_program,
+                                             make_sweep_overlapped,
+                                             make_sweep_stream,
+                                             prepare_values)
+        A = sparse.laplacian_2d(16, 8)
+        b, pr, pc = 8, 4, 2
+        bs, nb = analyze_structure(A, b, pr, pc)
+        Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
+        devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
+        mesh = Mesh(devs, ("xy",))
+        Lh = jnp.asarray(Lh_s, jnp.float64)
+        Dinv = jnp.asarray(Dinv_s, jnp.float64)
+
+        def run(prog, mk):
+            fn = jax.jit(shard_map(mk(prog), mesh=mesh,
+                                   in_specs=(P("xy"), P("xy")),
+                                   out_specs=P("xy")))
+            return np.asarray(fn(Lh, Dinv))
+
+        outs = {}
+        for kind in (TreeKind.HYBRID, TreeKind.FLAT):
+            outs[kind, "st"] = run(
+                build_program(bs, nb, b, pr, pc, kind,
+                              options=PlanOptions(stream=True,
+                                                  kind=kind)),
+                make_sweep_stream)
+            outs[kind, "ov"] = run(
+                build_program(bs, nb, b, pr, pc, kind, overlap=True),
+                make_sweep_overlapped)
+        for ex in ("st", "ov"):
+            d = abs(outs[TreeKind.HYBRID, ex]
+                    - outs[TreeKind.FLAT, ex]).max()
+            assert d == 0.0, (ex, d)
+        print("OK")
+    """, x64=True)
 
 
 def test_levels_are_independent(lap_bs):

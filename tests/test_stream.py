@@ -180,11 +180,156 @@ def test_schedule_stream_single_device():
         sp.csr_matrix(sparse.laplacian_2d(8, 8)), max_supernode=8)
     plan = build_plan(bs, Grid2D(1, 1), TreeKind.SHIFTED, nb=8)
     ov, st = schedule_stream(plan)
-    assert st.shifts == () and st.W == 0
+    assert st.shifts == () and st.nslots == 0 and st.W == 0
     assert st.nrounds == len(ov.rounds)
-    assert (st.recv_shift == -1).all()
+    assert (st.recv_slot == -1).all()
+    assert st.slot_active.shape == (st.steps, 0)
     for t in range(st.steps):
         assert not decode_round_lanes(st, t)
+
+
+def test_stream_shift_mask_replay(ov_st):
+    """Gated-slot property test: the per-round shift-mask tables decode
+    back to exactly the GlobalRound lane sets, round for round. Every
+    slot perm is a single grid-offset bijection; a round's recv-slot
+    assignments derive exactly the slots its gate row activates; the
+    union of active slots covers exactly the round's permute pairs; and
+    the executed-wire number from the gate table equals the simulator's
+    independent recv-slot lens (simulated == executed, wire edition)."""
+    import types
+
+    from repro.core.simulator import executed_wire_bytes
+    from repro.core.stream import stream_shifts_per_round, \
+        stream_wire_blocks, stream_wire_bytes
+
+    plan, ov, st = ov_st
+    pr, pc = st.pr, st.pc
+    assert st.axis_factored and st.nslots > 0
+
+    for si, perm in enumerate(st.slot_perm):
+        offs = {((d // pc - s // pc) % pr, (d % pc - s % pc) % pc)
+                for (s, d) in perm}
+        assert offs == {tuple(st.slot_shift[si])}, \
+            f"slot {si} mixes grid offsets {offs}"
+        assert len({s for s, _ in perm}) == len(perm)
+        assert len({d for _, d in perm}) == len(perm)
+        assert 1 <= st.slot_width[si] <= st.W
+
+    for t, rnd in enumerate(ov.rounds):
+        gated = {si for si in range(st.nslots) if st.slot_active[t, si]}
+        derived = {int(si) for si in st.recv_slot[t] if si >= 0}
+        assert gated == derived, f"round {t} gate/receive drift"
+        # the active slots cover exactly this round's permute pairs
+        pairs = {(s, d) for (s, d) in rnd.perm}
+        for (s, d) in pairs:
+            si = int(st.recv_slot[t, d])
+            assert (s, d) in st.slot_perm[si]
+        # decoded gated lanes == GlobalRound lanes (the replay property,
+        # through the gate-checking decode path)
+        assert set(decode_round_lanes(st, t)) == _round_real_lanes(ov,
+                                                                   rnd)
+    assert not st.slot_active[st.nrounds].any()
+
+    # wire accounting: gate-table blocks == the manual per-round sum,
+    # and the simulator's independent lens prices the same bytes
+    manual = sum(len(st.slot_perm[si]) * st.slot_width[si]
+                 for t in range(st.steps)
+                 for si in range(st.nslots) if st.slot_active[t, si])
+    assert stream_wire_blocks(st) == manual
+    prog = types.SimpleNamespace(b=8, stream_tables=st,
+                                 overlap_plan=ov)
+    assert executed_wire_bytes(prog) == stream_wire_bytes(st, 8)
+    # gating executes fewer permutes per round than the flat-ring
+    # encoding's every-shift-every-round
+    assert 0 < stream_shifts_per_round(st) < len(st.shifts)
+
+
+def test_stream_flat_ring_mode():
+    """``axis_factored=False`` recovers the PR-5 flat-ring encoding —
+    one always-active full-ring slot per used shift — through the same
+    slot machinery, and the gated grid-factored lowering of the same
+    plan ships strictly (>2×) fewer wire blocks."""
+    from repro.core.stream import stream_wire_blocks
+
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(16, 8)), max_supernode=8)
+    plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=16)
+    ov_f, st_f = schedule_stream(plan, axis_factored=False)
+    assert not st_f.axis_factored
+    P = 8
+    assert st_f.nslots == len(st_f.shifts)
+    for si, perm in enumerate(st_f.slot_perm):
+        dlt = st_f.slot_shift[si]
+        assert dlt == ((perm[0][1] - perm[0][0]) % P,)
+        assert len(perm) == P and st_f.slot_width[si] == st_f.W
+    assert st_f.slot_active.all()
+    assert stream_wire_blocks(st_f) == \
+        st_f.steps * st_f.nslots * P * st_f.W
+    # flat mode still replays the identical lanes
+    for t, rnd in enumerate(ov_f.rounds):
+        assert set(decode_round_lanes(st_f, t)) == _round_real_lanes(
+            ov_f, rnd)
+
+    ov_g, st_g = schedule_stream(plan)
+    assert 2 * stream_wire_blocks(st_g) < stream_wire_blocks(st_f)
+
+
+def test_stream_shift_budget_coarsens():
+    """``shift_budget`` trades wire for fewer gated permutes: the slot
+    dictionary shrinks to the budget (or one slot per grid offset), the
+    replay property still holds lane-for-lane, and the wire cost sits
+    between the exact-width dictionary's and the flat ring's."""
+    from repro.core.stream import stream_wire_blocks
+
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(16, 8)), max_supernode=8)
+    plan = build_plan(bs, Grid2D(4, 2), TreeKind.SHIFTED, nb=16)
+    ov, st = schedule_stream(plan)
+    noffs = len({tuple(sh) for sh in st.slot_shift})
+    ovb, stb = schedule_stream(plan, shift_budget=noffs)
+    assert stb.nslots <= noffs < st.nslots
+    for t, rnd in enumerate(ovb.rounds):
+        assert set(decode_round_lanes(stb, t)) == _round_real_lanes(
+            ovb, rnd)
+    ov_f, st_f = schedule_stream(plan, axis_factored=False)
+    assert stream_wire_blocks(st) <= stream_wire_blocks(stb) \
+        < stream_wire_blocks(st_f)
+    with pytest.raises(ValueError, match="one comm slot per grid "
+                                         "offset"):
+        schedule_stream(plan, shift_budget=1)
+    with pytest.raises(ValueError, match="axis_factored=True"):
+        PlanOptions(stream=True, axis_factored=False, shift_budget=4)
+
+
+def test_stream_tables_grid8x4():
+    """Tentpole validation at grid 8×4, where the flat ring pays ~200×
+    unrolled wire: host-side lowering replays lane-for-lane, simulated
+    wire equals executed wire from the gated tables, and the gated
+    encoding lands within 4× of the unrolled executor's wire (the flat
+    ring's every-shift-every-round is >25× here)."""
+    import types
+
+    from repro.core.simulator import executed_wire_bytes
+    from repro.core.stream import overlap_wire_blocks, \
+        stream_shifts_per_round, stream_wire_blocks, stream_wire_bytes
+
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(32, 8)), max_supernode=8)
+    plan = build_plan(bs, Grid2D(8, 4), TreeKind.SHIFTED, nb=32)
+    ov, st = schedule_stream(plan)
+    for t, rnd in enumerate(ov.rounds):
+        assert set(decode_round_lanes(st, t)) == _round_real_lanes(ov,
+                                                                   rnd)
+    prog = types.SimpleNamespace(b=8, stream_tables=st, overlap_plan=ov)
+    assert executed_wire_bytes(prog) == stream_wire_bytes(st, 8)
+
+    wire_unrolled = overlap_wire_blocks(ov)
+    wire_gated = stream_wire_blocks(st)
+    _, st_f = schedule_stream(plan, axis_factored=False)
+    wire_flat = stream_wire_blocks(st_f)
+    assert wire_gated <= 4 * wire_unrolled, (wire_gated, wire_unrolled)
+    assert wire_flat > 25 * wire_unrolled, (wire_flat, wire_unrolled)
+    assert stream_shifts_per_round(st) < len(st.shifts) / 2
 
 
 def test_stream_executor_bit_identical_nb16():
@@ -314,6 +459,60 @@ def test_stream_executor_bit_identical_nb32():
     """, x64=True, timeout=600)
 
 
+@pytest.mark.slow
+@pytest.mark.bigmesh
+def test_stream_executor_bit_identical_grid8x4():
+    """The tentpole's target scale: a 32-host-device 8×4 grid
+    (``bigmesh`` marker — run with ``-m bigmesh``), where the flat ring
+    would execute 31 permutes every round. The gated stream executor is
+    f64 bit-identical to the unrolled overlapped executor and the
+    level-serial oracle, and its executed wire matches the simulator."""
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import sparse
+        from repro.core.plan import PlanOptions
+        from repro.core.simulator import executed_wire_bytes
+        from repro.core.stream import stream_wire_bytes
+        from repro.core.trees import TreeKind
+        from repro.core.pselinv_dist import (analyze_structure,
+                                             build_program, gather_blocks,
+                                             make_sweep,
+                                             make_sweep_overlapped,
+                                             make_sweep_stream,
+                                             prepare_values)
+        A = sparse.laplacian_2d(32, 8)
+        b, pr, pc = 8, 8, 4
+        bs, nb = analyze_structure(A, b, pr, pc)
+        Lh_s, Dinv_s = prepare_values(A, bs, nb, b, pr, pc)
+        devs = np.array(jax.devices()[:pr * pc]).reshape(pr * pc)
+        mesh = Mesh(devs, ("xy",))
+        Lh = jnp.asarray(Lh_s, jnp.float64)
+        Dinv = jnp.asarray(Dinv_s, jnp.float64)
+
+        def run(prog, mk):
+            fn = jax.jit(shard_map(mk(prog), mesh=mesh,
+                                   in_specs=(P("xy"), P("xy")),
+                                   out_specs=P("xy")))
+            return np.asarray(fn(Lh, Dinv))
+
+        prog_t = build_program(bs, nb, b, pr, pc,
+                               options=PlanOptions(stream=True))
+        assert executed_wire_bytes(prog_t) == \\
+            stream_wire_bytes(prog_t.stream_tables, b)
+        out_t = run(prog_t, make_sweep_stream)
+        out_o = run(build_program(bs, nb, b, pr, pc, TreeKind.SHIFTED,
+                                  overlap=True), make_sweep_overlapped)
+        out_s = run(build_program(bs, nb, b, pr, pc, TreeKind.SHIFTED),
+                    make_sweep)
+        assert abs(out_t - out_o).max() <= 1e-12, abs(out_t - out_o).max()
+        assert abs(out_t - out_s).max() <= 1e-12, abs(out_t - out_s).max()
+        print("OK")
+    """, ndev=32, x64=True, timeout=600)
+
+
 def test_stream_engine_session_end_to_end():
     """PlanOptions(stream=True) through the engine: cached analyze, a
     no-retrace solve hot path, batched solves bit-identical to the
@@ -339,10 +538,24 @@ def test_stream_engine_session_end_to_end():
                                      options=PlanOptions())
         assert base is not eng
 
-        # stats: default keys unchanged; compile metrics on demand
+        # stats: schedule keys shared with the unrolled session, plus
+        # the stream session's executed-wire pair; compile metrics on
+        # demand
         s = eng.stats()
-        assert set(s) == {"ppermute_rounds", "peak_arena_blocks"}
-        assert s == base.stats()       # same schedule, same arena
+        assert set(s) == {"ppermute_rounds", "peak_arena_blocks",
+                          "stream_wire_bytes", "stream_shifts_per_round"}
+        sb = base.stats()
+        assert set(sb) == {"ppermute_rounds", "peak_arena_blocks"}
+        for k in sb:                   # same schedule, same arena
+            assert s[k] == sb[k]
+        assert s["stream_wire_bytes"] > 0
+        # gating beats the flat-ring encoding's every-shift-every-round
+        nshifts = len(eng.program.stream_tables.shifts)
+        assert 0 < s["stream_shifts_per_round"] < nshifts
+        # simulated == executed wire: the simulator's independent lens
+        # over the gated tables agrees with the table-derived number
+        from repro.core.simulator import executed_wire_bytes
+        assert executed_wire_bytes(eng) == s["stream_wire_bytes"]
         cs = eng.stats(compile=True)
         cu = base.stats(compile=True)
         for k in ("trace_lower_ms", "compile_ms", "jaxpr_lines",

@@ -75,14 +75,17 @@ def main() -> None:
     # structure-cache and round-stream rows
     # (`selinv/solve_batched_us_per_matrix_b{1,4,16}`,
     # `selinv/engine_cache_hits`, `selinv/stream_{compile_ms,hlo_bytes,
-    # us_per_call}`) — fail loudly if a refactor drops them from the
-    # trajectory instead of silently recording a thinner entry
+    # us_per_call,wire_bytes,shifts_per_round}`) — fail loudly if a
+    # refactor drops them from the trajectory instead of silently
+    # recording a thinner entry
     if "selinv" in args.only.split(",") and "selinv" not in session["failed"]:
         names = {row["name"] for row in session["benches"]}
         need = ({f"selinv/solve_batched_us_per_matrix_b{B}"
                  for B in (1, 4, 16)}
                 | {"selinv/engine_cache_hits", "selinv/stream_compile_ms",
-                   "selinv/stream_hlo_bytes", "selinv/stream_us_per_call"})
+                   "selinv/stream_hlo_bytes", "selinv/stream_us_per_call",
+                   "selinv/stream_wire_bytes",
+                   "selinv/stream_shifts_per_round"})
         missing = sorted(need - names)
         if missing:
             raise SystemExit(
