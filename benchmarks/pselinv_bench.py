@@ -53,8 +53,44 @@ def run(full: bool = False):
         csv_row(f"selinv/{backend}", dt * 1e6,
                 f"N={A.shape[0]} nsuper={bs.nsuper} err={err:.2e}")
         assert err < 1e-3
+    _plan_lint_bench()
     _run_ir_compare(full)
     return True
+
+
+def _plan_lint_bench():
+    """PlanLint static-verifier cost + diagnostic counts, host-side (the
+    checker pipeline never touches a device). Records the tier-1 4×2
+    lint cost (`selinv/plan_lint_ms`) and the 8×4 ``bigmesh`` case
+    (`selinv/bigmesh_8x4_lint_ms`) — the first bench row at a >8-device
+    grid (ROADMAP: bench, not just validate, bigger grids). Both must
+    report zero ERROR diagnostics: every shipped plan passes PlanLint."""
+    import scipy.sparse as sp
+
+    from repro.core import verify
+    from repro.core.plan import TreeKind, build_plan, schedule_overlapped
+    from repro.core.schedule import Grid2D
+    from repro.core.stream import lower_stream, stream_wire_blocks
+    from repro.core.symbolic import symbolic_factorize
+
+    for name, nx, nb, pr, pc in (("plan_lint_ms", 16, 16, 4, 2),
+                                 ("bigmesh_8x4_lint_ms", 32, 32, 8, 4)):
+        bs = symbolic_factorize(
+            sp.csr_matrix(sparse.laplacian_2d(nx, 8)), max_supernode=8)
+        plan = build_plan(bs, Grid2D(pr, pc), TreeKind.SHIFTED, nb=nb)
+        ov = schedule_overlapped(plan)
+        st = lower_stream(ov)
+        t0 = time.perf_counter()
+        diags = (verify.check_plan(plan) + verify.check_overlap(ov, plan)
+                 + verify.check_stream(st, plan))
+        dt = time.perf_counter() - t0
+        nerr = sum(1 for d in diags if d.severity == "error")
+        nwarn = len(diags) - nerr
+        csv_row(f"selinv/{name}", dt * 1e6,
+                f"nb={nb} grid={pr}x{pc} errors={nerr} warnings={nwarn} "
+                f"rounds={len(ov.rounds)} "
+                f"wire_blocks={stream_wire_blocks(st)}")
+        assert nerr == 0, verify.lint_report(diags)
 
 
 def _run_ir_compare(full: bool):

@@ -99,6 +99,24 @@ def main():
           f"vs {fs['stream_shifts_per_round']:.2f}  "
           f"|out - flat| = {abs(out_stream - out_flat).max():.1e}")
 
+    # 7. PlanLint: every program above already passed the static
+    #    verifier at build time (PlanOptions(verify="error") is the
+    #    default — analyze raises PlanVerificationError on any
+    #    ERROR-severity diagnostic). Corrupt a copy of the lowered
+    #    stream tables the way a buggy scheduler would — flip one
+    #    slot_active gate bit off while the receive table still routes a
+    #    device onto the slot — and the linter names the defect:
+    import copy
+
+    from repro.core import verify
+
+    st = copy.deepcopy(streng.program.stream_tables)
+    t, si = np.argwhere(st.slot_active)[0]
+    st.slot_active[t, si] = False
+    diags = verify.check_stream(st, streng.program.plan)
+    print("PlanLint on a corrupted copy:")
+    print(verify.lint_report(diags))
+
 
 if __name__ == "__main__":
     main()

@@ -33,6 +33,7 @@ thin back-compat shims over this engine.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import threading
 from dataclasses import dataclass, field
@@ -138,13 +139,21 @@ class PSelInvEngine:
 
     @classmethod
     def analyze(cls, structure_or_A, b: int, grid: Grid2D,
-                options: PlanOptions = PlanOptions()) -> "PSelInvEngine":
+                options: PlanOptions = PlanOptions(), *,
+                verify: str | None = None) -> "PSelInvEngine":
         """Symbolic analysis → CommPlan → schedule → tables → jitted
         sweep, **once per structure**. Accepts a matrix (symbolically
         factorized here) or a ready :class:`BlockStructure`; returns the
         cached engine when an identical (structure, b, grid, options)
-        session already exists."""
+        session already exists.
+
+        ``verify`` overrides ``options.verify`` — the PlanLint mode
+        (``"error"`` | ``"warn"`` | ``"off"``) applied to the lowered
+        program at build time. Part of the cache key (two sessions that
+        differ only in verification mode compile independently)."""
         check_grid_devices(grid.pr, grid.pc)
+        if verify is not None:
+            options = dataclasses.replace(options, verify=verify)
         if isinstance(structure_or_A, BlockStructure):
             bs = structure_or_A
             validate_uniform_widths(bs, b)

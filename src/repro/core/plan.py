@@ -126,7 +126,13 @@ class PlanOptions:
     one slot per grid offset) until the cap is met, trading wire bytes
     back for fewer gated permutes in the loop body. Requires
     ``axis_factored=True`` (the flat-ring lowering has exactly one slot
-    per ring shift already)."""
+    per ring shift already).
+
+    ``verify``: the PlanLint mode applied to every lowered artifact at
+    ``build_program`` time (``core/verify.py``): ``"error"`` (default)
+    raises :class:`~.verify.PlanVerificationError` on any ERROR-severity
+    diagnostic, ``"warn"`` reduces the report to one ``warnings.warn``,
+    ``"off"`` skips the static pass."""
     kind: TreeKind = TreeKind.SHIFTED
     overlap: bool = True
     coalesce_max: int = 8
@@ -134,8 +140,13 @@ class PlanOptions:
     stream: bool = False
     axis_factored: bool = True
     shift_budget: int | None = None
+    verify: str = "error"
 
     def __post_init__(self):
+        if self.verify not in ("error", "warn", "off"):
+            raise ValueError(
+                f"PlanOptions(verify={self.verify!r}) — expected one of "
+                "'error', 'warn', 'off'")
         if self.stream and not self.overlap:
             raise ValueError(
                 "PlanOptions(stream=True) lowers the *overlapped* round "

@@ -101,7 +101,8 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
                   coalesce_max: int = 8,
                   window: int | None = None,
                   stream: bool = False, *,
-                  options: PlanOptions | None = None) -> PSelInvProgram:
+                  options: PlanOptions | None = None,
+                  verify: str = "error") -> PSelInvProgram:
     """Build the CommPlan IR and compile it to executable tables.
 
     ``options`` (a :class:`~.plan.PlanOptions`) bundles and overrides
@@ -122,11 +123,19 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     ``overlap=True``) additionally lowers the overlapped rounds into the
     uniform round-indexed tables of ``core/stream.py`` for
     :func:`make_sweep_stream` — the whole sweep as one ``lax.fori_loop``
-    body."""
+    body.
+
+    ``verify`` (overridden by ``options.verify`` when an options bundle
+    is passed) runs the PlanLint static pass (``core/verify.py``) over
+    every artifact just compiled: ``"error"`` raises
+    :class:`~.verify.PlanVerificationError` on any ERROR-severity
+    diagnostic, ``"warn"`` condenses the report into one
+    ``warnings.warn``, ``"off"`` skips the pass."""
     if options is not None:
         kind, overlap = options.kind, options.overlap
         coalesce_max, window = options.coalesce_max, options.window
         stream = options.stream
+        verify = options.verify
     if stream and not overlap:
         raise ValueError(
             "stream=True lowers the overlapped round stream — it "
@@ -142,10 +151,17 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     elif overlap:
         ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
                                  window=window, options=options)
-    return PSelInvProgram(
+    prog = PSelInvProgram(
         nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
         exec_plan=None if overlap else compile_exec(plan),
         overlap_plan=ov, stream_tables=st)
+    if verify != "off":
+        from .verify import enforce_verification, verify_program
+        enforce_verification(
+            verify_program(prog), mode=verify,
+            where=f"build_program(nb={nb}, grid={pr}x{pc}, "
+                  f"stream={stream}, overlap={overlap})")
+    return prog
 
 
 def _dyn(buf, i):
@@ -242,7 +258,8 @@ def make_sweep(prog: PSelInvProgram, batched: bool = False):
     ``batched=True`` builds the multi-matrix variant (leading batch axis
     on the value tensors; see :func:`_wrap_sweep`)."""
     ex = prog.exec_plan
-    assert ex is not None, "build_program() the IR path first"
+    if ex is None:
+        raise ValueError("build_program() the IR path first")
     b, pr, pc = prog.b, prog.pr, prog.pc
     nbr, nbc = ex.nbr, ex.nbc
 
@@ -426,7 +443,8 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     ``batched=True`` builds the multi-matrix variant (leading batch
     axis on the value tensors; see :func:`_wrap_sweep`)."""
     ov = prog.overlap_plan
-    assert ov is not None, "build_program(..., overlap=True) first"
+    if ov is None:
+        raise ValueError("build_program(..., overlap=True) first")
     b, pr, pc = prog.b, prog.pr, prog.pc
     nbr, nbc = ov.nbr, ov.nbc
     N = ov.n_ainv
@@ -547,8 +565,9 @@ def make_sweep_stream(prog: PSelInvProgram, batched: bool = False):
     actually uses. Call under shard_map exactly like :func:`make_sweep`;
     ``batched=True`` builds the multi-matrix variant."""
     st = prog.stream_tables
-    assert st is not None, \
-        "build_program(..., options=PlanOptions(stream=True)) first"
+    if st is None:
+        raise ValueError(
+            "build_program(..., options=PlanOptions(stream=True)) first")
     b = prog.b
     pr, pc = st.pr, st.pc
     P = pr * pc
@@ -860,7 +879,8 @@ def make_sweep_unrolled(prog: PSelInvProgram):
     """The pre-IR sweep: per-supernode processing with per-pair
     ``jnp.where`` chains. O(nb × rounds × pairs) trace size — the
     benchmark baseline the IR executor is measured against."""
-    assert prog.iters is not None, "use build_program_unrolled()"
+    if prog.iters is None:
+        raise ValueError("use build_program_unrolled()")
     nb, b, pr, pc = prog.nb, prog.b, prog.pr, prog.pc
     nbr, nbc = prog.nbr, prog.nbc
 

@@ -531,32 +531,29 @@ def executed_wire_bytes(prog_or_engine) -> float:
     simulated-equals-executed wire invariant: the per-round active slot
     sets are re-derived from ``recv_slot`` (which devices receive on
     which slot), cross-checked against the ``slot_active`` gate table
-    the device program branches on, and only then priced — so a gate
-    table that drifted from the receive table fails loudly instead of
-    producing an agreeing-but-wrong byte count. Must equal
-    ``stream.stream_wire_bytes`` of the same tables (tested, and
-    asserted against the unrolled overlapped executor's wire in the
-    bench). For an unrolled overlapped program it prices each round's
-    single static permute (``len(perm) × width`` blocks)."""
+    the device program branches on (through PlanLint's
+    ``verify.check_stream_gates`` — the one shared implementation), and
+    only then priced — so a gate table that drifted from the receive
+    table fails loudly instead of producing an agreeing-but-wrong byte
+    count. Must equal ``stream.stream_wire_bytes`` of the same tables
+    (tested, and asserted against the unrolled overlapped executor's
+    wire in the bench). For an unrolled overlapped program it prices
+    each round's single static permute (``len(perm) × width``
+    blocks)."""
     prog = getattr(prog_or_engine, "program", prog_or_engine)
     b = prog.b
     st = getattr(prog, "stream_tables", None)
     if st is not None:
+        from .verify import check_stream_gates
+        bad = check_stream_gates(st)
+        if bad:
+            raise ValueError(
+                "stream gate tables drifted from the receive tables:\n"
+                + "\n".join(f"  {d}" for d in bad))
         blocks = 0
         for t in range(st.steps):
-            derived = {int(si) for si in st.recv_slot[t] if si >= 0}
             gated = {si for si in range(st.nslots)
                      if st.slot_active[t, si]}
-            if st.axis_factored and derived != gated:
-                raise ValueError(
-                    f"stream round {t}: slots with receivers "
-                    f"{sorted(derived)} != gated active slots "
-                    f"{sorted(gated)} — the gate table drifted from the "
-                    "receive table")
-            if not derived <= gated:
-                raise ValueError(
-                    f"stream round {t}: device receives on an inactive "
-                    f"slot ({sorted(derived - gated)})")
             blocks += sum(len(st.slot_perm[si]) * st.slot_width[si]
                           for si in gated)
         return float(blocks) * b * b * BYTES_PER_ELT

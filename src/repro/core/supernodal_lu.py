@@ -76,7 +76,9 @@ class _JaxBackend:
                                               unit_diagonal=True))
 
     def gemm(self, acc, a, b, alpha=-1.0):
-        assert alpha == -1.0
+        if alpha != -1.0:
+            raise ValueError(f"gemm supports only alpha=-1.0 (the "
+                             f"Schur-update sign), got {alpha}")
         return self._gemm(acc, a, b)
 
     def matmul(self, a, b):
@@ -102,7 +104,9 @@ class _PallasBackend(_JaxBackend):
         self._kops = kops
 
     def gemm(self, acc, a, b, alpha=-1.0):
-        assert alpha == -1.0
+        if alpha != -1.0:
+            raise ValueError(f"gemm supports only alpha=-1.0 (the "
+                             f"Schur-update sign), got {alpha}")
         return self._kops.block_gemm_acc(acc, a, b, alpha=-1.0)
 
     def matmul(self, a, b):

@@ -47,7 +47,10 @@ def partition_supernodes(n: int, max_size: int,
             acc = 0
         acc += int(s)
     offs.append(offs[-1] + acc)
-    assert offs[-1] == n
+    if offs[-1] != n:
+        raise ValueError(
+            f"supernode cuts cover {offs[-1]} of {n} columns — the "
+            "given sizes do not partition the matrix")
     return np.asarray(offs, dtype=np.int64)
 
 

@@ -27,6 +27,37 @@ import tempfile
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def validate_rows(rows, *, where: str) -> None:
+    """Schema-check one session's bench rows before they land in the
+    trajectory: every row must be a dict with a ``name`` string and a
+    numeric ``us_per_call`` — a malformed row fails the recording run
+    instead of silently poisoning downstream tooling."""
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or not isinstance(
+                row.get("name"), str) or not row["name"]:
+            raise SystemExit(
+                f"[bench] {where}: row {i} has no 'name' string: {row!r}")
+        if not isinstance(row.get("us_per_call"), (int, float)) \
+                or isinstance(row["us_per_call"], bool):
+            raise SystemExit(
+                f"[bench] {where}: row {i} ({row['name']}) has no "
+                f"numeric 'us_per_call': {row.get('us_per_call')!r}")
+
+
+def validate_history(hist) -> None:
+    """Schema-check the merged trajectory before writing it back: rev
+    labels unique, every entry's rows well-formed."""
+    seen = set()
+    for entry in hist:
+        rev = entry.get("rev")
+        if rev in seen:
+            raise SystemExit(
+                f"[bench] trajectory has duplicate rev {rev!r} — the "
+                "idempotent replace-in-place path was bypassed")
+        seen.add(rev)
+        validate_rows(entry.get("benches", []), where=f"rev {rev}")
+
+
 def git_rev() -> str:
     try:
         return subprocess.run(
@@ -78,6 +109,7 @@ def main() -> None:
     # us_per_call,wire_bytes,shifts_per_round}`) — fail loudly if a
     # refactor drops them from the trajectory instead of silently
     # recording a thinner entry
+    validate_rows(session["benches"], where="session")
     if "selinv" in args.only.split(",") and "selinv" not in session["failed"]:
         names = {row["name"] for row in session["benches"]}
         need = ({f"selinv/solve_batched_us_per_matrix_b{B}"
@@ -85,7 +117,8 @@ def main() -> None:
                 | {"selinv/engine_cache_hits", "selinv/stream_compile_ms",
                    "selinv/stream_hlo_bytes", "selinv/stream_us_per_call",
                    "selinv/stream_wire_bytes",
-                   "selinv/stream_shifts_per_round"})
+                   "selinv/stream_shifts_per_round",
+                   "selinv/plan_lint_ms", "selinv/bigmesh_8x4_lint_ms"})
         missing = sorted(need - names)
         if missing:
             raise SystemExit(
@@ -109,6 +142,7 @@ def main() -> None:
     else:
         hist.append(entry)
         action = f"appended rev {rev}"
+    validate_history(hist)
     with open(args.out, "w") as f:
         json.dump(hist, f, indent=1)
         f.write("\n")
