@@ -54,6 +54,7 @@ def run(full: bool = False):
                 f"N={A.shape[0]} nsuper={bs.nsuper} err={err:.2e}")
         assert err < 1e-3
     _plan_lint_bench()
+    _hlo_lint_bench()
     _run_ir_compare(full)
     return True
 
@@ -91,6 +92,37 @@ def _plan_lint_bench():
                 f"rounds={len(ov.rounds)} "
                 f"wire_blocks={stream_wire_blocks(st)}")
         assert nerr == 0, verify.lint_report(diags)
+
+
+def _hlo_lint_bench():
+    """HloLint compiled-artifact verifier cost + diagnostic counts,
+    host-side (abstract-mesh trace + lower, `core/hlo_verify.py` — no
+    devices). Records the tier-1 nb=16 4×2 stream case
+    (`selinv/hlo_lint_ms`): trace + lower the sweep and cross-check the
+    compiled jaxpr/StableHLO layers against the plan tables. Must
+    report zero ERROR diagnostics: every lowered program passes
+    PlanLint AND HloLint."""
+    import scipy.sparse as sp
+
+    from repro.core import hlo_verify, verify
+    from repro.core.plan import PlanOptions
+    from repro.core.pselinv_dist import build_program, pad_nb
+    from repro.core.symbolic import symbolic_factorize
+
+    bs = symbolic_factorize(
+        sp.csr_matrix(sparse.laplacian_2d(16, 8)), max_supernode=8)
+    prog = build_program(bs, pad_nb(bs.nsuper, 4, 2), 8, 4, 2,
+                         options=PlanOptions(stream=True))
+    t0 = time.perf_counter()
+    diags = hlo_verify.lint_program(prog)
+    dt = time.perf_counter() - t0
+    nerr = sum(1 for d in diags if d.severity == "error")
+    nwarn = len(diags) - nerr
+    csv_row("selinv/hlo_lint_ms", dt * 1e6,
+            f"nb=16 grid=4x2 errors={nerr} warnings={nwarn} "
+            f"permutes={len(hlo_verify.expected_permutes(prog))} "
+            f"wire_blocks={hlo_verify.expected_wire_blocks(prog)}")
+    assert nerr == 0, verify.lint_report(diags)
 
 
 def _run_ir_compare(full: bool):

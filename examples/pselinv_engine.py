@@ -117,6 +117,33 @@ def main():
     print("PlanLint on a corrupted copy:")
     print(verify.lint_report(diags))
 
+    # 8. HloLint: PlanLint proves the *tables* sound; HloLint closes the
+    #    last gap by parsing the jaxpr / StableHLO / optimized HLO that
+    #    XLA actually compiles and cross-checking it against those same
+    #    tables — permute pair sets, fori_loop trip counts, wire-byte
+    #    conservation, hot-path hygiene. lint_compiled() runs all three
+    #    layers on the live session (PlanOptions(verify_compiled=...)
+    #    wires the same pass into build_program; tools/hlo_lint.py is
+    #    the CLI over the whole corpus, devices not required).
+    from repro.core import hlo_verify
+
+    hdiags = streng.lint_compiled()
+    nerr = sum(1 for d in hdiags if d.severity == "error")
+    print(f"HloLint over the compiled stream sweep: {nerr} error(s) "
+          f"across jaxpr + stablehlo + optimized-hlo layers")
+
+    #    inject the defect HloLint exists for — a stray all-gather on a
+    #    hot path whose whole design is point-to-point permute rounds —
+    #    into a copy of the lowered StableHLO and it names the line:
+    _, sh_text = hlo_verify.abstract_lower(streng.program)
+    bad = sh_text.replace(
+        "func.func public @main",
+        '"stablehlo.all_gather"(%bad) : (tensor<8x8xf32>) -> '
+        "tensor<8x8xf32>\nfunc.func public @main", 1)
+    hdiags = hlo_verify.check_hygiene(bad, layer="stablehlo")
+    print("HloLint on a corrupted copy:")
+    print(verify.lint_report(hdiags))
+
 
 if __name__ == "__main__":
     main()

@@ -122,6 +122,8 @@ class PSelInvEngine:
     _fns: Dict[bool, object] = field(default_factory=dict)
     _compile_metrics: Dict[Tuple, Dict[str, float]] = \
         field(default_factory=dict, repr=False)
+    _hlo_lint: Dict[Tuple, list] = field(default_factory=dict,
+                                         repr=False)
     _jit_lock: threading.Lock = field(default_factory=threading.Lock,
                                       repr=False)
     _round_schedule: Optional[object] = None
@@ -140,7 +142,8 @@ class PSelInvEngine:
     @classmethod
     def analyze(cls, structure_or_A, b: int, grid: Grid2D,
                 options: PlanOptions = PlanOptions(), *,
-                verify: str | None = None) -> "PSelInvEngine":
+                verify: str | None = None,
+                verify_compiled: str | None = None) -> "PSelInvEngine":
         """Symbolic analysis → CommPlan → schedule → tables → jitted
         sweep, **once per structure**. Accepts a matrix (symbolically
         factorized here) or a ready :class:`BlockStructure`; returns the
@@ -149,11 +152,18 @@ class PSelInvEngine:
 
         ``verify`` overrides ``options.verify`` — the PlanLint mode
         (``"error"`` | ``"warn"`` | ``"off"``) applied to the lowered
-        program at build time. Part of the cache key (two sessions that
-        differ only in verification mode compile independently)."""
+        program at build time. ``verify_compiled`` likewise overrides
+        ``options.verify_compiled`` — the HloLint mode applied to the
+        compiled jaxpr/StableHLO layers of the program's own sweep
+        (``core/hlo_verify.py``; traced on an abstract mesh at build
+        time). Both are part of the cache key (two sessions that differ
+        only in verification mode compile independently)."""
         check_grid_devices(grid.pr, grid.pc)
         if verify is not None:
             options = dataclasses.replace(options, verify=verify)
+        if verify_compiled is not None:
+            options = dataclasses.replace(options,
+                                          verify_compiled=verify_compiled)
         if isinstance(structure_or_A, BlockStructure):
             bs = structure_or_A
             validate_uniform_widths(bs, b)
@@ -293,7 +303,11 @@ class PSelInvEngine:
         per (batched, dtype, batch size) shape class and cached:
         ``trace_lower_ms`` (trace + StableHLO lowering wall time),
         ``compile_ms`` (XLA compile wall time), ``jaxpr_lines`` (traced
-        program size) and ``hlo_bytes`` (lowered HLO text size). This is
+        program size), ``hlo_bytes`` (lowered HLO text size),
+        ``ppermute_count`` (collective-permute ops in the optimized HLO
+        XLA actually runs) and ``collective_bytes`` (their per-device
+        traffic priced with while-loop trip counts —
+        ``core/hlo_ir.collective_bytes``). This is
         how the uniform round-stream's program-size win over the
         unrolled executors is inspected without running the bench — the
         stream's jaxpr/HLO no longer grow with the round count. Uses
@@ -326,15 +340,75 @@ class PSelInvEngine:
         jaxpr_lines = len(str(traced.jaxpr).splitlines())
         hlo_bytes = len(lowered.as_text())
         t0 = time.perf_counter()
-        lowered.compile()
+        compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
+        # compiled-collective census off the optimized HLO (the program
+        # XLA actually runs): permute op count and per-device collective
+        # traffic priced with while-loop trip counts
+        from . import hlo_ir
+        compiled_txt = compiled.as_text()
+        ppermute_count = sum(
+            1 for op in hlo_ir.parse_collectives(compiled_txt)
+            if op.op == "collective-permute")
+        coll_bytes = float(sum(
+            hlo_ir.collective_bytes(compiled_txt).values()))
         m = {"trace_lower_ms": t_lower * 1e3,
              "compile_ms": t_compile * 1e3,
              "jaxpr_lines": jaxpr_lines,
-             "hlo_bytes": hlo_bytes}
+             "hlo_bytes": hlo_bytes,
+             "ppermute_count": ppermute_count,
+             "collective_bytes": coll_bytes}
         with self._jit_lock:
             m = self._compile_metrics.setdefault(key, m)
         return m
+
+    def lint_compiled(self, batched: bool = False, dtype=jnp.float32,
+                      batch_size: int = 1, *, verify_compiled:
+                      str | None = None):
+        """HloLint the session's compiled sweep at **all three layers**
+        — traced jaxpr, lowered StableHLO, and the optimized HLO of a
+        real XLA compile (``core/hlo_verify.py``; cross-checks permute
+        conformance, loop trip counts, wire-byte conservation and
+        hot-path hygiene against the session's own plan tables).
+        Measured once per (batched, dtype, batch size) shape class and
+        cached. ``verify_compiled`` applies an enforcement mode to the
+        result (``"error"`` raises
+        :class:`~.verify.PlanVerificationError` on any ERROR
+        diagnostic, ``"warn"`` warns once, default ``None`` just
+        returns the diagnostics)."""
+        from . import hlo_verify
+        from .verify import enforce_verification
+
+        key = (batched, jnp.dtype(dtype).name,
+               int(batch_size) if batched else 1)
+        with self._jit_lock:
+            diags = self._hlo_lint.get(key)
+        if diags is None:
+            shape = ((int(batch_size),) if batched else ()) + (
+                self.grid.size, self.nb // self.grid.pr,
+                self.nb // self.grid.pc, self.b, self.b)
+            sd = jax.ShapeDtypeStruct(shape, dtype)
+            fn = jax.jit(self._shard_mapped_sweep(batched,
+                                                  counted=False))
+            traced = fn.trace(sd, sd)
+            lowered = traced.lower()
+            batch = int(batch_size) if batched else 1
+            diags = (hlo_verify.lint_jaxpr(traced.jaxpr, self.program,
+                                           batch=batch)
+                     + hlo_verify.lint_text(lowered.as_text(),
+                                            self.program, batch=batch,
+                                            layer="stablehlo")
+                     + hlo_verify.lint_text(lowered.compile().as_text(),
+                                            self.program, batch=batch,
+                                            layer="hlo"))
+            with self._jit_lock:
+                diags = self._hlo_lint.setdefault(key, diags)
+        if verify_compiled is not None:
+            enforce_verification(
+                diags, mode=verify_compiled,
+                where=f"compiled sweep (nb={self.nb}, "
+                      f"grid={self.grid.pr}x{self.grid.pc})")
+        return diags
 
     def stats(self, compile: bool = False) -> Dict[str, float]:
         """Static schedule metrics of the cached program: ppermute round

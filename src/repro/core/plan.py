@@ -132,7 +132,18 @@ class PlanOptions:
     ``build_program`` time (``core/verify.py``): ``"error"`` (default)
     raises :class:`~.verify.PlanVerificationError` on any ERROR-severity
     diagnostic, ``"warn"`` reduces the report to one ``warnings.warn``,
-    ``"off"`` skips the static pass."""
+    ``"off"`` skips the static pass.
+
+    ``verify_compiled``: the HloLint mode (``core/hlo_verify.py``)
+    applied to the *compiled* layers — the traced jaxpr and lowered
+    StableHLO of the program's own sweep, traced on an abstract mesh at
+    ``build_program`` time (no devices needed; same three modes).
+    Default ``"off"``: the pass re-traces and re-lowers the whole sweep
+    (seconds, not microseconds), so it is opt-in per session —
+    ``tools/hlo_lint.py``, ``tools/plan_lint.py --compiled`` and the
+    tier-1 conformance tests run it over every shipped shape, and
+    ``PSelInvEngine.lint_compiled`` adds the optimized-HLO layer from a
+    real XLA compile."""
     kind: TreeKind = TreeKind.SHIFTED
     overlap: bool = True
     coalesce_max: int = 8
@@ -141,12 +152,17 @@ class PlanOptions:
     axis_factored: bool = True
     shift_budget: int | None = None
     verify: str = "error"
+    verify_compiled: str = "off"
 
     def __post_init__(self):
         if self.verify not in ("error", "warn", "off"):
             raise ValueError(
                 f"PlanOptions(verify={self.verify!r}) — expected one of "
                 "'error', 'warn', 'off'")
+        if self.verify_compiled not in ("error", "warn", "off"):
+            raise ValueError(
+                f"PlanOptions(verify_compiled={self.verify_compiled!r}) "
+                "— expected one of 'error', 'warn', 'off'")
         if self.stream and not self.overlap:
             raise ValueError(
                 "PlanOptions(stream=True) lowers the *overlapped* round "

@@ -102,7 +102,8 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
                   window: int | None = None,
                   stream: bool = False, *,
                   options: PlanOptions | None = None,
-                  verify: str = "error") -> PSelInvProgram:
+                  verify: str = "error",
+                  verify_compiled: str = "off") -> PSelInvProgram:
     """Build the CommPlan IR and compile it to executable tables.
 
     ``options`` (a :class:`~.plan.PlanOptions`) bundles and overrides
@@ -130,12 +131,22 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
     every artifact just compiled: ``"error"`` raises
     :class:`~.verify.PlanVerificationError` on any ERROR-severity
     diagnostic, ``"warn"`` condenses the report into one
-    ``warnings.warn``, ``"off"`` skips the pass."""
+    ``warnings.warn``, ``"off"`` skips the pass.
+
+    ``verify_compiled`` (overridden by ``options.verify_compiled``)
+    additionally runs the HloLint compiled-artifact pass
+    (``core/hlo_verify.py``): the program's own sweep is traced and
+    lowered on an abstract mesh (no devices required) and the jaxpr /
+    StableHLO layers are cross-checked against the tables just built —
+    permute conformance, loop trip counts, wire-byte conservation,
+    hot-path hygiene. Same three modes; default ``"off"`` because the
+    pass costs a full re-trace + lowering of the sweep."""
     if options is not None:
         kind, overlap = options.kind, options.overlap
         coalesce_max, window = options.coalesce_max, options.window
         stream = options.stream
         verify = options.verify
+        verify_compiled = options.verify_compiled
     if stream and not overlap:
         raise ValueError(
             "stream=True lowers the overlapped round stream — it "
@@ -161,6 +172,13 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
             verify_program(prog), mode=verify,
             where=f"build_program(nb={nb}, grid={pr}x{pc}, "
                   f"stream={stream}, overlap={overlap})")
+    if verify_compiled != "off":
+        from .hlo_verify import lint_program
+        from .verify import enforce_verification
+        enforce_verification(
+            lint_program(prog), mode=verify_compiled,
+            where=f"compiled sweep of build_program(nb={nb}, "
+                  f"grid={pr}x{pc}, stream={stream}, overlap={overlap})")
     return prog
 
 

@@ -13,7 +13,6 @@ locks the device count at first init)."""
 
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Dict
@@ -25,104 +24,16 @@ from repro.config import SHAPES, get_config, list_configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (build_decode_step, build_prefill_step,
                                 build_train_step)
+# the HLO text parsing lives in core/hlo_ir.py (shared with HloLint,
+# ``core/hlo_verify.py``) — re-exported here because the dryrun is the
+# historical home of the collective byte pricing and its tests
+from repro.core.hlo_ir import (collective_bytes, computation_multipliers,
+                               split_computations)
 
-_COLL_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
+_split_computations = split_computations
+_computation_multipliers = computation_multipliers
 
-
-def _split_computations(txt: str) -> Dict[str, str]:
-    blocks: Dict[str, list] = {}
-    cur = None
-    for line in txt.splitlines():
-        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
-            m = re.match(r"(?:ENTRY\s+)?%?([^\s(]+)\s*\(", line)
-            cur = m.group(1) if m else None
-            if cur:
-                blocks[cur] = []
-        elif line.startswith("}"):
-            cur = None
-        elif cur is not None:
-            blocks[cur].append(line)
-    return {k: "\n".join(v) for k, v in blocks.items()}
-
-
-_WHILE_RE = re.compile(
-    r"while\(.*?\), condition=%?([^\s,]+), body=%?([^\s,]+)")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-
-
-def _computation_multipliers(txt: str) -> Dict[str, int]:
-    """Execution-count multiplier per HLO computation: while-loop bodies
-    execute trip-count times (xla's cost/temp analyses count them once —
-    verified; scan bodies would otherwise be undercounted). Trip count is
-    read from the loop-condition constant; nested loops multiply."""
-    blocks = _split_computations(txt)
-    mult: Dict[str, int] = {name: 1 for name in blocks}
-
-    edges = []  # (parent, body, trip)
-    for parent, body_txt in blocks.items():
-        for cond, body in _WHILE_RE.findall(body_txt):
-            consts = [int(c) for c in _CONST_RE.findall(blocks.get(cond, ""))]
-            trip = max(consts) if consts else 1
-            edges.append((parent, body, trip))
-
-    changed = True
-    while changed:                      # propagate through nesting
-        changed = False
-        for parent, body, trip in edges:
-            want = mult.get(parent, 1) * trip
-            if mult.get(body, 1) != want:
-                mult[body] = want
-                changed = True
-    return mult
-
-
-def _line_bytes(line: str, opname: str) -> int:
-    lhs_rhs = line.split("=", 1)[1]
-    head = lhs_rhs[:lhs_rhs.find(opname)]
-    if "%" in head:
-        # ``opname`` first appears inside the operand list (e.g.
-        # ``%add = f32[...] add(... %all-reduce.1)``): this line *uses* a
-        # collective result, it does not define one — don't count it.
-        return 0
-    nbytes = 0
-    for dt, dims in _SHAPE_RE.findall(head):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        nbytes += n * _DTYPE_BYTES[dt]
-    return nbytes
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-device collective traffic from the optimized HLO: sum of
-    result-shape bytes of every collective op, weighted by the execution
-    count of its enclosing computation (while-loop bodies × trip count).
-    all-gather/all-to-all results count the full gathered buffer — an
-    upper bound within (n-1)/n of wire traffic."""
-    mult = _computation_multipliers(hlo_text)
-    blocks = _split_computations(hlo_text)
-    out: Dict[str, float] = {}
-    for name, body in blocks.items():
-        k = mult.get(name, 1)
-        for line in body.splitlines():
-            line = line.strip()
-            m = _COLL_RE.search(line)
-            if not m or "=" not in line:
-                continue
-            nbytes = _line_bytes(line, m.group(1))
-            if nbytes:
-                out[m.group(1)] = out.get(m.group(1), 0.0) + float(nbytes) * k
-    return out
+__all__ = ["collective_bytes", "run_cell", "main"]
 
 
 class CellTimeout(Exception):

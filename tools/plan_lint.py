@@ -11,9 +11,17 @@ host-side (no devices needed, an 8×4 corpus lints in seconds):
     PYTHONPATH=src python tools/plan_lint.py            # default corpus
     PYTHONPATH=src python tools/plan_lint.py --grid 8x4 --nb 32
     PYTHONPATH=src python tools/plan_lint.py -v         # per-case report
+    PYTHONPATH=src python tools/plan_lint.py --compiled # + HloLint
+
+``--compiled`` chains the HloLint compiled-artifact verifier
+(``tools/hlo_lint.py`` / ``core/hlo_verify.py``) over the same corpus:
+each executor lowering is traced on an abstract mesh and its jaxpr /
+StableHLO layers cross-checked against the plan tables — still no
+devices required.
 
 Exits non-zero iff any case produces an ERROR-severity diagnostic —
-the CI contract "every lowered program passes PlanLint".
+the CI contract "every lowered program passes PlanLint and (with
+``--compiled``) HloLint".
 """
 from __future__ import annotations
 
@@ -85,6 +93,10 @@ def main(argv=None) -> int:
                     help="supernode blocking for --grid (default 32)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="report clean artifacts too")
+    ap.add_argument("--compiled", action="store_true",
+                    help="additionally run the HloLint compiled-"
+                         "artifact verifier (tools/hlo_lint.py) over "
+                         "the same corpus")
     args = ap.parse_args(argv)
 
     if args.grid:
@@ -104,6 +116,20 @@ def main(argv=None) -> int:
     print(f"[plan-lint] {status}: {narts} artifact(s) across "
           f"{len(corpus)} case(s) — {nerr} error(s), {nwarn} warning(s) "
           f"in {time.time() - t0:.1f}s")
+    if args.compiled:
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        import hlo_lint
+        ce = cw = cp = 0
+        for (nx, ny, nb, pr, pc) in corpus:
+            e, w, p = hlo_lint.lint_case(nx, ny, nb, pr, pc,
+                                         verbose=args.verbose)
+            ce += e
+            cw += w
+            cp += p
+        cstatus = "FAIL" if ce else "OK"
+        print(f"[hlo-lint] {cstatus}: {cp} compiled program(s) across "
+              f"{len(corpus)} case(s) — {ce} error(s), {cw} warning(s)")
+        nerr += ce
     return 1 if nerr else 0
 
 

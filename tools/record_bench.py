@@ -118,7 +118,8 @@ def main() -> None:
                    "selinv/stream_hlo_bytes", "selinv/stream_us_per_call",
                    "selinv/stream_wire_bytes",
                    "selinv/stream_shifts_per_round",
-                   "selinv/plan_lint_ms", "selinv/bigmesh_8x4_lint_ms"})
+                   "selinv/plan_lint_ms", "selinv/bigmesh_8x4_lint_ms",
+                   "selinv/hlo_lint_ms"})
         missing = sorted(need - names)
         if missing:
             raise SystemExit(
