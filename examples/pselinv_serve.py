@@ -1,0 +1,85 @@
+"""Batched serving with SelInvServer: structure-keyed coalescing over
+a mixed request stream.
+
+The engine makes B same-structure solves cost one compile and ~10×
+less per matrix; the server turns *traffic* into those batches: each
+submitted matrix is fingerprinted by sparsity pattern, coalesced with
+same-structure neighbors under a dynamic batch window (flush on full
+bucket / max wait / queue pressure), padded to a power-of-2 bucket so
+odd batch sizes reuse compiled programs, and answered through a
+per-request future.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    JAX_ENABLE_X64=1 PYTHONPATH=src python examples/pselinv_serve.py
+"""
+import time
+
+import numpy as np
+import scipy.sparse as sp
+
+import jax.numpy as jnp
+
+from repro.core import sparse
+from repro.core.engine import Grid, PSelInvEngine
+from repro.serve import BatchWindow, SelInvServer, ServeConfig
+
+
+def main():
+    PSelInvEngine.clear_cache()
+    grid = Grid(4, 2)
+
+    # 1. a server: engine parameters + the dynamic batch window.
+    #    max_batch=16 full buckets flush immediately; a lone request
+    #    waits at most 2 ms for company; a backlog past 64 flushes the
+    #    fullest queues early (bounded absorbed work — the paper's
+    #    load-balancing lesson applied to the request queue).
+    cfg = ServeConfig(b=8, grid=grid, dtype=jnp.float64,
+                      window=BatchWindow(max_batch=16, max_wait_ms=2.0,
+                                         pressure=64))
+
+    # 2. mixed traffic: two sparsity structures, shifted values — the
+    #    server coalesces per structure, never across.
+    A = sparse.laplacian_2d(16, 8)
+    B = sparse.laplacian_2d(24, 8)
+    I_A = sp.identity(A.shape[0])
+    I_B = sp.identity(B.shape[0])
+    stream = []
+    for i in range(40):
+        stream.append(A + 0.1 * (i + 1) * I_A if i % 3 else
+                      B + 0.1 * (i + 1) * I_B)
+
+    # 3. serve it: the context manager runs the background worker;
+    #    submit() returns a future immediately.
+    with SelInvServer(cfg) as srv:
+        t0 = time.perf_counter()
+        reqs = [srv.submit(M) for M in stream]
+        outs = [np.asarray(r.result(timeout=120)) for r in reqs]
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+
+    print(f"served {len(stream)} requests in {wall:.2f}s "
+          f"({wall / len(stream) * 1e3:.2f} ms/matrix, cold compiles "
+          f"included) in {stats['batches']} batches")
+    print(f"  latency p50/p95/p99: {stats['latency_p50_us'] / 1e3:.1f} / "
+          f"{stats['latency_p95_us'] / 1e3:.1f} / "
+          f"{stats['latency_p99_us'] / 1e3:.1f} ms")
+    print(f"  batch sizes {stats['batch_size_hist']} rode buckets "
+          f"{stats['batch_bucket_hist']} "
+          f"(occupancy {stats['batch_occupancy_mean']:.2f})")
+    for skey, s in stats["structures"].items():
+        print(f"  structure {skey}: buckets {s['buckets_used']} -> "
+              f"{s['trace_count']} compiles for {s['solve_calls']} "
+              f"batched solves")
+    print(f"  engine cache: {stats['engine_cache']['engines']} sessions, "
+          f"{stats['engine_cache']['bytes'] / 1e6:.1f} MB tables, "
+          f"{stats['engine_cache']['hits']} hits")
+
+    # 4. every served result is the matrix's own selected inverse —
+    #    identical to an unbatched engine.solve of the same matrix.
+    eng = srv.engine_for(stream[0])
+    ref = np.asarray(eng.solve(stream[0], dtype=jnp.float64))
+    print(f"  |served - unbatched| = {abs(outs[0] - ref).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import ClassVar, Dict, NamedTuple, Optional, Sequence, Tuple
 
@@ -49,12 +50,13 @@ from .plan import (PlanOptions, peak_arena_blocks, ppermute_round_count)
 from .pselinv_dist import (PSelInvProgram, analyze_structure, build_program,
                            check_grid_devices, make_sweep,
                            make_sweep_overlapped, make_sweep_stream,
-                           pad_nb, prepare_values, validate_uniform_widths)
+                           pad_nb, prepare_values, prepare_values_many,
+                           validate_uniform_widths)
 from .schedule import Grid2D
 from .symbolic import BlockStructure
 
 __all__ = ["Grid", "PlanOptions", "PSelInvEngine", "SolveValues",
-           "structure_key", "stack_values"]
+           "structure_key", "stack_values", "bucket_size"]
 
 #: the session API's name for the 2-D process grid (one definition —
 #: ``schedule.Grid2D`` — reused, not duplicated)
@@ -88,6 +90,48 @@ def structure_key(bs: BlockStructure) -> str:
         h.update(np.ascontiguousarray(s, dtype=np.int64).tobytes())
         h.update(b"|")
     return h.hexdigest()
+
+
+def bucket_size(B: int) -> int:
+    """The padded batch bucket for B matrices: the next power of two.
+
+    Each distinct batch length traces (and XLA-compiles) its own vmapped
+    sweep, so a serving workload with organic batch sizes 3, 5, 13, …
+    would retrace per length. Rounding up to power-of-2 buckets bounds
+    the program population at log₂(max batch) per structure — a burst of
+    13 rides the B=16 program (pad lanes carry zeros and are sliced off
+    the result)."""
+    if B < 1:
+        raise ValueError(f"batch size must be >= 1, got {B}")
+    return 1 << (B - 1).bit_length()
+
+
+def _approx_nbytes(obj, _seen=None, _depth=0) -> int:
+    """Approximate resident bytes of a program/table object: the sum of
+    every reachable numpy array's ``nbytes`` (dataclasses, dicts, lists,
+    tuples walked; shared arrays counted once). The engine cache's
+    size-aware eviction bound runs on this — an *approximation* is fine,
+    the arrays dominate and python-object overhead is noise."""
+    if _seen is None:
+        _seen = set()
+    if _depth > 16 or id(obj) in _seen:
+        return 0
+    if isinstance(obj, np.ndarray):
+        _seen.add(id(obj))
+        return int(obj.nbytes)
+    if isinstance(obj, (str, bytes, int, float, bool, complex,
+                        type(None))):
+        return 0
+    _seen.add(id(obj))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(_approx_nbytes(getattr(obj, f.name), _seen, _depth + 1)
+                   for f in dataclasses.fields(obj))
+    if isinstance(obj, dict):
+        return sum(_approx_nbytes(v, _seen, _depth + 1)
+                   for v in obj.values())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return sum(_approx_nbytes(v, _seen, _depth + 1) for v in obj)
+    return 0
 
 
 def _is_matrix(x) -> bool:
@@ -127,17 +171,28 @@ class PSelInvEngine:
     _jit_lock: threading.Lock = field(default_factory=threading.Lock,
                                       repr=False)
     _round_schedule: Optional[object] = None
+    _table_bytes: Optional[int] = field(default=None, repr=False)
 
     # ---- the structure cache (class-level, all sessions) --------------
-    _cache: ClassVar[Dict[Tuple, "PSelInvEngine"]] = {}
+    _cache: ClassVar["OrderedDict[Tuple, PSelInvEngine]"] = OrderedDict()
     _cache_lock: ClassVar[threading.Lock] = threading.Lock()
-    #: FIFO eviction bound — a long-lived server analyzing a stream of
+    #: LRU eviction bounds — a long-lived server analyzing a stream of
     #: distinct structures must not pin every session's tables and
-    #: compiled executables for process lifetime (raise it for workloads
-    #: that legitimately juggle more concurrent structures)
+    #: compiled executables for process lifetime. A cache *hit* moves
+    #: the session to the back of the queue, so the structures real
+    #: traffic keeps re-hitting stay resident (the serving layer's warm
+    #: engines) while one-off structures age out the front.
+    #: ``cache_max`` bounds the session count; ``cache_max_bytes``
+    #: bounds the summed per-engine table footprint
+    #: (:meth:`table_bytes`) — the real production bound, since table
+    #: bytes vary ~nb²·b² per structure while the count does not. The
+    #: most-recently-inserted session is never evicted, so a single
+    #: over-budget structure still solves.
     cache_max: ClassVar[int] = 16
+    cache_max_bytes: ClassVar[int] = 1 << 30
     cache_hits: ClassVar[int] = 0
     cache_misses: ClassVar[int] = 0
+    cache_evictions: ClassVar[int] = 0
 
     @classmethod
     def analyze(cls, structure_or_A, b: int, grid: Grid2D,
@@ -176,6 +231,7 @@ class PSelInvEngine:
             hit = cls._cache.get(key)
             if hit is not None:
                 cls.cache_hits += 1
+                cls._cache.move_to_end(key)    # LRU: a hit stays warm
                 return hit
             cls.cache_misses += 1
 
@@ -189,15 +245,38 @@ class PSelInvEngine:
             # somebody may have raced us past the miss above; keep the
             # first published session so `analyze` stays idempotent
             engine = cls._cache.setdefault(key, engine)
-            while len(cls._cache) > cls.cache_max:    # FIFO eviction
-                cls._cache.pop(next(iter(cls._cache)))
+            cls._cache.move_to_end(key)
+            cls._evict_locked()
         return engine
+
+    @classmethod
+    def _evict_locked(cls) -> None:
+        """LRU eviction under ``_cache_lock``: pop the front while the
+        session count exceeds ``cache_max`` or the summed table bytes
+        exceed ``cache_max_bytes`` — keeping at least the most recent
+        session so one over-budget structure still solves."""
+        def over():
+            if len(cls._cache) > cls.cache_max:
+                return True
+            return sum(e.table_bytes()
+                       for e in cls._cache.values()) > cls.cache_max_bytes
+        while len(cls._cache) > 1 and over():
+            cls._cache.popitem(last=False)
+            cls.cache_evictions += 1
+
+    @classmethod
+    def cache_bytes(cls) -> int:
+        """Summed approximate table bytes of every cached session (the
+        quantity ``cache_max_bytes`` bounds)."""
+        with cls._cache_lock:
+            return sum(e.table_bytes() for e in cls._cache.values())
 
     @classmethod
     def clear_cache(cls) -> None:
         with cls._cache_lock:
             cls._cache.clear()
             cls.cache_hits = cls.cache_misses = 0
+            cls.cache_evictions = 0
 
     # ---- lowering / jit (once per (batched, dtype) shape class) -------
     def _shard_mapped_sweep(self, batched: bool, counted: bool):
@@ -250,7 +329,23 @@ class PSelInvEngine:
             Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
         return SolveValues(Lh, Dinv)
 
-    def solve(self, values, dtype=jnp.float32):
+    def prepare_values_many(self, mats: Sequence,
+                            dtype=None) -> SolveValues:
+        """Batched numeric host factorization of B same-structure
+        matrices → stacked (B, P, nbr, nbc, b, b) shards in one
+        structure-driven pass (:func:`~.pselinv_dist
+        .prepare_values_many`) — the supernode loop runs once with
+        (B, b, b) block stacks, so the interpreter overhead that
+        dominates single-matrix prep amortizes across the batch (~9×
+        cheaper per matrix at B=16). The serving layer's host half of
+        the coalescing win."""
+        Lh, Dinv = prepare_values_many(mats, self.bs, self.nb, self.b,
+                                       self.grid.pr, self.grid.pc)
+        if dtype is not None:
+            Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        return SolveValues(Lh, Dinv)
+
+    def solve(self, values, dtype=jnp.float32, *, bucket: bool = False):
         """Selected inversion of one matrix — or a whole batch.
 
         ``values`` is a matrix (numeric-factorized here against the
@@ -261,7 +356,14 @@ class PSelInvEngine:
         vmapped sweep call. Returns the A⁻¹ shards in the same layout
         (rank 5 or 6). ``dtype`` casts the values (f32 default,
         matching ``run_distributed``); pass ``None`` to keep the
-        arrays' own dtype."""
+        arrays' own dtype.
+
+        ``bucket=True`` pads a batched solve up to the next power-of-2
+        bucket (:func:`bucket_size`) with zero-valued lanes and slices
+        the real results back out — every distinct batch length
+        otherwise traces and compiles its own program, while bucketed
+        batches of 3, 5, 13 all ride the B∈{4, 8, 16} programs (the
+        serving layer's retrace bound)."""
         if _is_matrix(values):
             values = self.prepare_values(values)
         Lh, Dinv = values
@@ -273,13 +375,57 @@ class PSelInvEngine:
                 f"values must be rank 5 (single) or rank 6 (leading "
                 f"batch axis), got shape {Lh.shape}")
         self.solve_calls += 1
+        if Lh.ndim == 6 and bucket:
+            B = Lh.shape[0]
+            Bp = bucket_size(B)
+            if Bp != B:
+                pad = ((0, Bp - B),) + ((0, 0),) * (Lh.ndim - 1)
+                out = self.jitted(batched=True)(jnp.pad(Lh, pad),
+                                                jnp.pad(Dinv, pad))
+                return out[:B]
         return self.jitted(batched=(Lh.ndim == 6))(Lh, Dinv)
 
-    def solve_many(self, mats: Sequence, dtype=jnp.float32):
+    def solve_many(self, mats: Sequence, dtype=jnp.float32, *,
+                   bucket: bool = False, batched_prep: bool = True):
         """Convenience: numeric-factorize each same-structure matrix,
-        stack along the batch axis, and run ONE batched solve."""
-        vals = stack_values([self.prepare_values(A) for A in mats])
-        return self.solve(vals, dtype=dtype)
+        stack along the batch axis, and run ONE batched solve.
+        ``batched_prep`` routes the host factorization through the
+        stacked :meth:`prepare_values_many` pass (numerics match the
+        per-matrix path to rounding); ``bucket`` pads the batch to its
+        power-of-2 bucket so odd batch lengths share compiled
+        programs."""
+        if batched_prep and len(mats) > 1:
+            vals = self.prepare_values_many(mats)
+        else:
+            vals = stack_values([self.prepare_values(A) for A in mats])
+        return self.solve(vals, dtype=dtype, bucket=bucket)
+
+    def table_bytes(self) -> int:
+        """Approximate resident bytes of this session's compiled tables
+        (every numpy array reachable from the program object, counted
+        once). Computed once and cached — the LRU cache's size-aware
+        eviction bound (``cache_max_bytes``) sums this across
+        sessions."""
+        if self._table_bytes is None:
+            self._table_bytes = _approx_nbytes(self.program)
+        return self._table_bytes
+
+    def aot_compile(self, batch_size: int = 1, dtype=jnp.float32, *,
+                    batched: bool = True):
+        """AOT trace → lower → XLA-compile the session's sweep for one
+        exact shape class and hand back the ``jax.stages.Compiled``
+        executable (*uncounted*: the no-retrace regression handle
+        ``trace_count`` never moves). This is the serialization seam the
+        serving layer's on-disk program cache
+        (``repro.serve.progcache``) builds on — a compiled executable
+        can be serialized, persisted, and reloaded after a restart
+        without re-tracing or re-compiling the hot structure."""
+        shape = ((int(batch_size),) if batched else ()) + (
+            self.grid.size, self.nb // self.grid.pr,
+            self.nb // self.grid.pc, self.b, self.b)
+        sd = jax.ShapeDtypeStruct(shape, dtype)
+        fn = jax.jit(self._shard_mapped_sweep(batched, counted=False))
+        return fn.trace(sd, sd).lower().compile()
 
     # ---- plan introspection (no re-lowering) --------------------------
     def round_schedule(self):
@@ -426,8 +572,17 @@ class PSelInvEngine:
         :meth:`compile_stats` directly for a batched or non-f32 class."""
         ex = (self.program.overlap_plan if self.options.overlap
               else self.program.exec_plan)
+        cls = type(self)
         out = {"ppermute_rounds": ppermute_round_count(ex),
-               "peak_arena_blocks": peak_arena_blocks(ex)}
+               "peak_arena_blocks": peak_arena_blocks(ex),
+               # structure-cache health (class-level, all sessions) +
+               # this session's own table footprint — the serving
+               # layer's warm-engine dashboard reads these
+               "table_bytes": self.table_bytes(),
+               "cache_engines": len(cls._cache),
+               "cache_hits": cls.cache_hits,
+               "cache_misses": cls.cache_misses,
+               "cache_evictions": cls.cache_evictions}
         if self.options.stream:
             from .stream import stream_shifts_per_round, stream_wire_bytes
             st = self.program.stream_tables

@@ -1,0 +1,32 @@
+"""Structure-keyed request coalescing and batched serving on top of
+:class:`~repro.core.engine.PSelInvEngine`.
+
+The engine makes B same-structure matrices cost one compile and ~15×
+less per matrix; this package turns real traffic into those batches.
+:class:`SelInvServer` accepts single-matrix solve requests, hashes each
+by block structure (the engine's structure sha1), coalesces
+same-structure requests into batched ``solve_many`` calls under dynamic
+batch windows (flush on max-batch, max-wait, queue pressure) with
+padded power-of-2 batch buckets, and streams results back per request
+with per-request status. The paper's load-balancing lesson — bound how
+much concurrent work any one participant absorbs — reappears here as
+admission control and backpressure on the request queue.
+
+Layout: ``batcher`` (requests, futures, windows, the coalescing
+queues), ``server`` (the serving loop: admission, dispatch, failure
+isolation), ``progcache`` (warm engines + the on-disk serialized
+program cache), ``metrics`` (latency percentiles, batch occupancy,
+queue/rejection counters), ``traffic`` (the synthetic mixed-structure
+Poisson harness behind ``tools/serve_bench.py``).
+"""
+from .batcher import (BatchWindow, RequestStatus, RequestTimedOut,
+                      ServeError, ServerOverloaded, SolveRequest,
+                      StructureBatcher)
+from .metrics import ServeMetrics
+from .progcache import ProgramDiskCache
+from .server import SelInvServer, ServeConfig
+
+__all__ = ["SelInvServer", "ServeConfig", "BatchWindow", "SolveRequest",
+           "RequestStatus", "StructureBatcher", "ServeMetrics",
+           "ProgramDiskCache", "ServeError", "ServerOverloaded",
+           "RequestTimedOut"]

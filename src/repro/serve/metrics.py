@@ -1,0 +1,99 @@
+"""Serving observability: latency percentiles, batch occupancy, queue
+and rejection counters.
+
+One :class:`ServeMetrics` instance per server, updated from the submit
+path and the batch worker, read via :meth:`ServeMetrics.snapshot`
+(exported through ``server.stats()`` and recorded by
+``benchmarks/pselinv_bench.py``). Everything is guarded by one lock —
+the counters are tiny and the snapshot is O(completed requests) for the
+percentile sort, which a serving loop calls rarely.
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["ServeMetrics"]
+
+#: counter names every snapshot reports, even when still zero
+COUNTERS = ("submitted", "solved", "failed", "timed_out", "rejected",
+            "batches")
+
+
+class ServeMetrics:
+    """Thread-safe serving counters + reservoirs.
+
+    - request lifecycle counters (``submitted``/``solved``/``failed``/
+      ``timed_out``/``rejected``) and ``batches`` served;
+    - per-request latency (submit → completion) reservoir, reported as
+      p50/p95/p99 microseconds;
+    - batch-occupancy histogram: per served batch, the real batch size
+      and the padded power-of-2 bucket it rode — occupancy is
+      real/bucket, the fraction of compiled lanes doing real work;
+    - queue-depth gauge (current and high-water).
+    """
+
+    def __init__(self, max_latencies: int = 100_000):
+        self._lock = threading.Lock()
+        self._counts = Counter()
+        self._lat_s: List[float] = []
+        self._max_lat = max_latencies
+        self._batch_real = Counter()     # real batch size -> count
+        self._batch_bucket = Counter()   # padded bucket -> count
+        self._occupancy: List[float] = []
+        self.queue_depth = 0
+        self.queue_depth_max = 0
+
+    # ---- writers ------------------------------------------------------
+    def inc(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self._counts[name] += by
+
+    def observe_latency(self, seconds: float) -> None:
+        with self._lock:
+            if len(self._lat_s) < self._max_lat:
+                self._lat_s.append(seconds)
+
+    def observe_batch(self, real: int, bucket: int) -> None:
+        with self._lock:
+            self._counts["batches"] += 1
+            self._batch_real[int(real)] += 1
+            self._batch_bucket[int(bucket)] += 1
+            self._occupancy.append(real / bucket if bucket else 0.0)
+
+    def set_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            self.queue_depth = depth
+            self.queue_depth_max = max(self.queue_depth_max, depth)
+
+    # ---- readers ------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """One coherent dict of everything above; percentile keys are
+        microseconds (``None`` before the first completion)."""
+        with self._lock:
+            lat = np.asarray(self._lat_s, dtype=np.float64)
+            occ = np.asarray(self._occupancy, dtype=np.float64)
+            out: Dict = {name: int(self._counts[name])
+                         for name in COUNTERS}
+            for name, count in self._counts.items():
+                out.setdefault(name, int(count))
+            if lat.size:
+                p50, p95, p99 = np.percentile(lat, (50, 95, 99))
+                out.update(latency_p50_us=float(p50 * 1e6),
+                           latency_p95_us=float(p95 * 1e6),
+                           latency_p99_us=float(p99 * 1e6),
+                           latency_mean_us=float(lat.mean() * 1e6))
+            else:
+                out.update(latency_p50_us=None, latency_p95_us=None,
+                           latency_p99_us=None, latency_mean_us=None)
+            out["batch_occupancy_mean"] = (float(occ.mean())
+                                           if occ.size else None)
+            out["batch_size_hist"] = dict(sorted(self._batch_real.items()))
+            out["batch_bucket_hist"] = dict(
+                sorted(self._batch_bucket.items()))
+            out["queue_depth"] = self.queue_depth
+            out["queue_depth_max"] = self.queue_depth_max
+            return out

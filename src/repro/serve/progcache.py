@@ -1,0 +1,134 @@
+"""On-disk AOT program cache for warm serving across restarts.
+
+A serving process that restarts loses every XLA compile; for the hot
+structures that is seconds of warmup per (structure, bucket). The
+engine's :meth:`~repro.core.engine.PSelInvEngine.aot_compile` exposes
+the serialization seam — a ``jax.stages.Compiled`` sweep for one exact
+shape class — and :mod:`jax.experimental.serialize_executable` can
+persist and reload it without re-tracing or re-compiling.
+
+:class:`ProgramDiskCache` keys each executable by everything that could
+invalidate it: the structure sha1, supernode width, grid, plan options,
+batch bucket, dtype, plus the jax version and backend platform (a
+serialized CPU executable must never be fed to a TPU runtime or a
+different jax). ``get`` returns a callable executable — loaded from
+disk on hit, compiled + persisted on miss. Writes are atomic
+(tmp + rename) so a crashed writer never leaves a torn entry.
+
+Degradation is graceful: when the serialization API is unavailable the
+cache counts the miss and returns a freshly compiled executable without
+persisting — serving works, only restart-warmth is lost.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+import threading
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ProgramDiskCache"]
+
+
+class ProgramDiskCache:
+    """Persisted AOT executables keyed by (structure, bucket, dtype,
+    session + runtime parameters). One instance per directory; safe for
+    concurrent ``get`` from one process (an in-memory layer fronts the
+    disk)."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        os.makedirs(self.path, exist_ok=True)
+        self._lock = threading.Lock()
+        self._mem: Dict[str, object] = {}
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+        self.load_errors = 0
+
+    # ---- keying -------------------------------------------------------
+    @staticmethod
+    def cache_key(engine, batch_size: int, dtype) -> str:
+        """sha1 over every compile-relevant coordinate of the
+        executable."""
+        h = hashlib.sha1()
+        skey, b, grid, options = engine.key
+        h.update(skey.encode())
+        h.update(repr((b, grid.pr, grid.pc, options)).encode())
+        h.update(repr((int(batch_size), jnp.dtype(dtype).name)).encode())
+        h.update(jax.__version__.encode())
+        h.update(jax.default_backend().encode())
+        return h.hexdigest()
+
+    def _entry(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.pselinv.pkl")
+
+    # ---- the cache ----------------------------------------------------
+    def get(self, engine, batch_size: int, dtype=jnp.float32):
+        """The compiled batched sweep for (engine, batch bucket, dtype):
+        in-memory hit → disk hit (deserialize) → compile + persist."""
+        key = self.cache_key(engine, batch_size, dtype)
+        with self._lock:
+            comp = self._mem.get(key)
+            if comp is not None:
+                self.hits += 1
+                return comp
+        comp = self._load(key)
+        if comp is not None:
+            with self._lock:
+                self.hits += 1
+                self._mem.setdefault(key, comp)
+            return comp
+        with self._lock:
+            self.misses += 1
+        comp = engine.aot_compile(batch_size=batch_size, dtype=dtype,
+                                  batched=True)
+        self._store(key, comp)
+        with self._lock:
+            self._mem.setdefault(key, comp)
+        return comp
+
+    def _load(self, key: str):
+        path = self._entry(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            from jax.experimental import serialize_executable as se
+            with open(path, "rb") as f:
+                payload, in_tree, out_tree = pickle.load(f)
+            return se.deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:            # torn/stale/incompatible entry:
+            with self._lock:         # fall through to a fresh compile
+                self.load_errors += 1
+            return None
+
+    def _store(self, key: str, comp) -> None:
+        try:
+            from jax.experimental import serialize_executable as se
+            blob = pickle.dumps(se.serialize(comp))
+        except Exception:            # serialization unavailable here —
+            return                   # serve from memory, skip persist
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._entry(key))   # atomic publish
+            with self._lock:
+                self.stores += 1
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "stores": self.stores,
+                    "load_errors": self.load_errors,
+                    "entries": len([n for n in os.listdir(self.path)
+                                    if n.endswith(".pselinv.pkl")])}

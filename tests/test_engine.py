@@ -180,9 +180,16 @@ def test_engine_simulate_and_stats():
     sim = eng.simulate()
     assert sim.peak_arena_blocks == peak_arena_blocks(
         eng.program.overlap_plan)
-    assert eng.stats() == {
-        "ppermute_rounds": ppermute_round_count(eng.program.overlap_plan),
-        "peak_arena_blocks": sim.peak_arena_blocks}
+    st = eng.stats()
+    assert st["ppermute_rounds"] == ppermute_round_count(
+        eng.program.overlap_plan)
+    assert st["peak_arena_blocks"] == sim.peak_arena_blocks
+    # cache-health counters ride along (the serving layer reads them)
+    assert st["cache_engines"] == len(PSelInvEngine._cache)
+    assert st["cache_hits"] == PSelInvEngine.cache_hits
+    assert st["cache_misses"] == PSelInvEngine.cache_misses
+    assert st["cache_evictions"] == PSelInvEngine.cache_evictions
+    assert st["table_bytes"] == eng.table_bytes() > 0
     # simulate_schedule takes the engine (or program) and derives the
     # schedule itself
     sim2 = simulate_schedule(eng)
@@ -217,10 +224,10 @@ def test_engine_rejects_bad_inputs():
 
 
 def test_engine_cache_eviction_bound():
-    """The structure cache is FIFO-bounded (a long-lived server over a
+    """The structure cache is LRU-bounded (a long-lived server over a
     stream of distinct structures must not pin every session forever):
-    exceeding cache_max evicts the oldest session, and re-analyzing an
-    evicted structure builds a fresh engine."""
+    exceeding cache_max evicts the least-recently-used session, and
+    re-analyzing an evicted structure builds a fresh engine."""
     PSelInvEngine.clear_cache()
     old = PSelInvEngine.cache_max
     PSelInvEngine.cache_max = 2
@@ -241,3 +248,127 @@ def test_engine_cache_eviction_bound():
     finally:
         PSelInvEngine.cache_max = old
         PSelInvEngine.clear_cache()
+
+
+def test_engine_cache_lru_hit_keeps_session_warm():
+    """A cache *hit* moves the session to the back of the eviction
+    queue: with cache_max=2, re-hitting the oldest of two sessions
+    makes the *other* one the eviction victim — the serving layer's hot
+    structures stay resident however old they are."""
+    PSelInvEngine.clear_cache()
+    old = PSelInvEngine.cache_max
+    PSelInvEngine.cache_max = 2
+    try:
+        e4 = PSelInvEngine.analyze(sparse.laplacian_2d(4, 8), b=8,
+                                   grid=Grid(1, 1), options=PlanOptions())
+        PSelInvEngine.analyze(sparse.laplacian_2d(6, 8), b=8,
+                              grid=Grid(1, 1), options=PlanOptions())
+        # hit the older session: under FIFO it would still be evicted
+        # next; under LRU the hit re-warms it
+        assert PSelInvEngine.analyze(sparse.laplacian_2d(4, 8), b=8,
+                                     grid=Grid(1, 1),
+                                     options=PlanOptions()) is e4
+        PSelInvEngine.analyze(sparse.laplacian_2d(8, 8), b=8,
+                              grid=Grid(1, 1), options=PlanOptions())
+        assert PSelInvEngine.cache_evictions >= 1
+        again = PSelInvEngine.analyze(sparse.laplacian_2d(4, 8), b=8,
+                                      grid=Grid(1, 1),
+                                      options=PlanOptions())
+        assert again is e4, "the re-hit session was evicted (FIFO?)"
+    finally:
+        PSelInvEngine.cache_max = old
+        PSelInvEngine.clear_cache()
+
+
+def test_engine_cache_byte_bound_eviction():
+    """The size-aware bound: with cache_max_bytes below two sessions'
+    summed table footprint, inserting the second evicts the first even
+    though the session *count* is under cache_max — but the newest
+    session itself always stays (one over-budget structure must still
+    solve)."""
+    PSelInvEngine.clear_cache()
+    old_max, old_bytes = (PSelInvEngine.cache_max,
+                          PSelInvEngine.cache_max_bytes)
+    try:
+        e1 = PSelInvEngine.analyze(sparse.laplacian_2d(4, 8), b=8,
+                                   grid=Grid(1, 1), options=PlanOptions())
+        assert e1.table_bytes() > 0
+        PSelInvEngine.cache_max_bytes = e1.table_bytes()  # room for ~one
+        ev0 = PSelInvEngine.cache_evictions
+        e2 = PSelInvEngine.analyze(sparse.laplacian_2d(6, 8), b=8,
+                                   grid=Grid(1, 1), options=PlanOptions())
+        assert PSelInvEngine.cache_evictions == ev0 + 1
+        assert list(PSelInvEngine._cache.values()) == [e2]
+        assert PSelInvEngine.cache_bytes() == e2.table_bytes()
+        # the lone over-budget session is never evicted by its own insert
+        assert e2.table_bytes() > PSelInvEngine.cache_max_bytes \
+            or len(PSelInvEngine._cache) == 1
+    finally:
+        PSelInvEngine.cache_max = old_max
+        PSelInvEngine.cache_max_bytes = old_bytes
+        PSelInvEngine.clear_cache()
+
+
+def test_engine_bucketed_solve_shares_pow2_programs():
+    """bucket=True bounds the compiled-program population: organic batch
+    sizes 3, 5, 13 ride the B=4, 8, 16 programs (three traces), and
+    later exact power-of-2 batches add none — while every padded result
+    still matches its unbatched solve."""
+    run_sub("""
+        import numpy as np
+        import scipy.sparse as sp
+        import jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.engine import (Grid, PlanOptions, PSelInvEngine,
+                                       bucket_size)
+
+        A = sparse.laplacian_2d(12, 8)
+        I = sp.identity(A.shape[0])
+        eng = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                    options=PlanOptions())
+        singles = {}
+        t0 = eng.trace_count
+        for B in (3, 5, 13):
+            mats = [A + 0.1 * (B + i) * I for i in range(B)]
+            out = np.asarray(eng.solve_many(mats, dtype=jnp.float64,
+                                            bucket=True))
+            assert out.shape[0] == B, out.shape      # pad sliced off
+            for i in (0, B - 1):
+                ref = np.asarray(eng.solve(mats[i], dtype=jnp.float64))
+                assert abs(out[i] - ref).max() <= 1e-12
+        assert eng.trace_count == t0 + 3 + 1, (
+            "expected one batched trace per bucket {4, 8, 16} plus the "
+            f"rank-5 single-solve trace, got {eng.trace_count - t0}")
+        # exact power-of-2 batches reuse those same programs: no traces
+        t1 = eng.trace_count
+        for B in (4, 8, 16):
+            mats = [A + 0.01 * (B + i) * I for i in range(B)]
+            eng.solve_many(mats, dtype=jnp.float64, bucket=True)
+        assert eng.trace_count == t1, "pow2 batches retraced"
+        print("OK")
+    """, x64=True)
+
+
+def test_prepare_values_many_matches_per_matrix_path():
+    """The stacked host factorization is numerically the per-matrix
+    path: prepare_values_many over shifted copies matches a loop of
+    prepare_values to ≤1e-12 (f64), and a bad-pattern member fails with
+    its batch index named while the pure per-matrix error is unchanged."""
+    import scipy.sparse as sp
+    from repro.core.engine import stack_values
+    A = sparse.laplacian_2d(12, 8)
+    I_A = sp.identity(A.shape[0])
+    mats = [A + c * I_A for c in (0.0, 0.25, 1.0, 2.0)]
+    eng = PSelInvEngine.analyze(A, b=8, grid=Grid(1, 1),
+                                options=PlanOptions())
+    many = eng.prepare_values_many(mats)
+    loop = stack_values([eng.prepare_values(M) for M in mats])
+    assert many.Lh.shape == loop.Lh.shape
+    assert abs(many.Lh - loop.Lh).max() <= 1e-12
+    assert abs(many.Dinv - loop.Dinv).max() <= 1e-12
+    # a member whose pattern escapes the structure names its index
+    B = sp.lil_matrix(A)
+    B[0, 95] = B[95, 0] = 1.0
+    with pytest.raises(ValueError,
+                       match=r"matrix 2 of 3:.*outside the analyzed"):
+        eng.prepare_values_many([mats[0], mats[1], sp.csr_matrix(B)])

@@ -541,13 +541,17 @@ def test_stream_engine_session_end_to_end():
         # stats: schedule keys shared with the unrolled session, plus
         # the stream session's executed-wire pair; compile metrics on
         # demand
+        cache_keys = {"table_bytes", "cache_engines", "cache_hits",
+                      "cache_misses", "cache_evictions"}
         s = eng.stats()
         assert set(s) == {"ppermute_rounds", "peak_arena_blocks",
-                          "stream_wire_bytes", "stream_shifts_per_round"}
+                          "stream_wire_bytes",
+                          "stream_shifts_per_round"} | cache_keys
         sb = base.stats()
-        assert set(sb) == {"ppermute_rounds", "peak_arena_blocks"}
-        for k in sb:                   # same schedule, same arena
-            assert s[k] == sb[k]
+        assert set(sb) == {"ppermute_rounds",
+                           "peak_arena_blocks"} | cache_keys
+        for k in ("ppermute_rounds", "peak_arena_blocks"):
+            assert s[k] == sb[k]       # same schedule, same arena
         assert s["stream_wire_bytes"] > 0
         # gating beats the flat-ring encoding's every-shift-every-round
         nshifts = len(eng.program.stream_tables.shifts)

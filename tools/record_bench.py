@@ -119,7 +119,12 @@ def main() -> None:
                    "selinv/stream_wire_bytes",
                    "selinv/stream_shifts_per_round",
                    "selinv/plan_lint_ms", "selinv/bigmesh_8x4_lint_ms",
-                   "selinv/hlo_lint_ms"})
+                   "selinv/hlo_lint_ms",
+                   # the serving layer's scorecard (PR 9): coalesced
+                   # latency, throughput and bucket occupancy
+                   "selinv/serve_p50_us",
+                   "selinv/serve_throughput_rps",
+                   "selinv/serve_batch_occupancy"})
         missing = sorted(need - names)
         if missing:
             raise SystemExit(
