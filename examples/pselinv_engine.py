@@ -144,6 +144,37 @@ def main():
     print("HloLint on a corrupted copy:")
     print(verify.lint_report(hdiags))
 
+    # 9. SweepScope: the lints above verify the schedule; the
+    #    observability tier *measures* it. Enable the global span
+    #    tracer, re-run analyze + solve, and every host-side stage
+    #    (symbolic -> plan -> lower -> verify, value prep, solve
+    #    dispatch) lands in a ring buffer; profile_rounds() then
+    #    re-executes the sweep as per-round jitted segments with
+    #    block_until_ready fencing — the measured per-round timeline,
+    #    joined against the plan wire tables and the alpha-beta
+    #    simulator. Everything exports to one Chrome-trace JSON
+    #    (chrome://tracing, ui.perfetto.dev); tools/obs_report.py is
+    #    the CLI over the same pipeline.
+    from repro.obs.export import write_trace
+    from repro.obs.trace import TRACER
+
+    TRACER.enable()
+    obs_eng = PSelInvEngine.analyze(A, b=8, grid=Grid(4, 2),
+                                    options=PlanOptions(coalesce_max=6))
+    vals = obs_eng.prepare_values(A)
+    obs_eng.solve(vals)
+    spans = TRACER.spans()
+    print(f"traced {len(spans)} host spans: "
+          + " ".join(sorted({s.name for s in spans})))
+
+    profile = obs_eng.profile_rounds(vals, reps=2)
+    TRACER.disable()
+    print(profile.report())          # per-round walls + imbalance table
+    path = write_trace("pselinv_engine.trace.json", spans=spans,
+                       profile=profile)
+    print(f"wrote {path} — load it in chrome://tracing or "
+          f"ui.perfetto.dev")
+
 
 if __name__ == "__main__":
     main()

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import ClassVar, Dict, NamedTuple, Optional, Sequence, Tuple
@@ -46,6 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from ..compat import shard_map
+from ..obs.registry import REGISTRY
+from ..obs.trace import TRACER
 from .plan import (PlanOptions, peak_arena_blocks, ppermute_round_count)
 from .pselinv_dist import (PSelInvProgram, analyze_structure, build_program,
                            check_grid_devices, make_sweep,
@@ -172,6 +175,11 @@ class PSelInvEngine:
                                       repr=False)
     _round_schedule: Optional[object] = None
     _table_bytes: Optional[int] = field(default=None, repr=False)
+    #: span-derived gauges (µs): wall of the most recent solve dispatch
+    #: and the most recent host value-prep — surfaced by :meth:`stats`
+    #: and published to the global metrics registry
+    _last_solve_us: Optional[float] = field(default=None, repr=False)
+    _last_prepare_us: Optional[float] = field(default=None, repr=False)
 
     # ---- the structure cache (class-level, all sessions) --------------
     _cache: ClassVar["OrderedDict[Tuple, PSelInvEngine]"] = OrderedDict()
@@ -219,28 +227,36 @@ class PSelInvEngine:
         if verify_compiled is not None:
             options = dataclasses.replace(options,
                                           verify_compiled=verify_compiled)
-        if isinstance(structure_or_A, BlockStructure):
-            bs = structure_or_A
-            validate_uniform_widths(bs, b)
-            nb = pad_nb(bs.nsuper, grid.pr, grid.pc)
-        else:
-            bs, nb = analyze_structure(structure_or_A, b, grid.pr, grid.pc)
+        with TRACER.span("engine.analyze", b=b,
+                         grid=f"{grid.pr}x{grid.pc}") as sp:
+            if isinstance(structure_or_A, BlockStructure):
+                bs = structure_or_A
+                validate_uniform_widths(bs, b)
+                nb = pad_nb(bs.nsuper, grid.pr, grid.pc)
+            else:
+                with TRACER.span("analyze.symbolic"):
+                    bs, nb = analyze_structure(structure_or_A, b,
+                                               grid.pr, grid.pc)
+            sp.set(nb=nb)
 
-        key = (structure_key(bs), b, grid, options)
-        with cls._cache_lock:
-            hit = cls._cache.get(key)
-            if hit is not None:
-                cls.cache_hits += 1
-                cls._cache.move_to_end(key)    # LRU: a hit stays warm
-                return hit
-            cls.cache_misses += 1
+            key = (structure_key(bs), b, grid, options)
+            with cls._cache_lock:
+                hit = cls._cache.get(key)
+                if hit is not None:
+                    cls.cache_hits += 1
+                    cls._cache.move_to_end(key)  # LRU: a hit stays warm
+                    sp.set(cache="hit")
+                    return hit
+                cls.cache_misses += 1
+            sp.set(cache="miss")
 
-        from jax.sharding import Mesh
-        program = build_program(bs, nb, b, grid.pr, grid.pc,
-                                options=options)
-        devs = np.array(jax.devices()[:grid.size]).reshape(grid.size)
-        engine = cls(bs=bs, b=b, nb=nb, grid=grid, options=options,
-                     program=program, mesh=Mesh(devs, ("xy",)), key=key)
+            from jax.sharding import Mesh
+            program = build_program(bs, nb, b, grid.pr, grid.pc,
+                                    options=options)
+            devs = np.array(jax.devices()[:grid.size]).reshape(grid.size)
+            engine = cls(bs=bs, b=b, nb=nb, grid=grid, options=options,
+                         program=program, mesh=Mesh(devs, ("xy",)),
+                         key=key)
         with cls._cache_lock:
             # somebody may have raced us past the miss above; keep the
             # first published session so `analyze` stays idempotent
@@ -323,10 +339,13 @@ class PSelInvEngine:
     def prepare_values(self, A, dtype=None) -> SolveValues:
         """Numeric host factorization of one matrix against the cached
         structure → device-layout shards. No symbolic work."""
-        Lh, Dinv = prepare_values(A, self.bs, self.nb, self.b,
-                                  self.grid.pr, self.grid.pc)
-        if dtype is not None:
-            Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        t0 = time.perf_counter()
+        with TRACER.span("engine.prepare_values"):
+            Lh, Dinv = prepare_values(A, self.bs, self.nb, self.b,
+                                      self.grid.pr, self.grid.pc)
+            if dtype is not None:
+                Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        self._last_prepare_us = (time.perf_counter() - t0) * 1e6
         return SolveValues(Lh, Dinv)
 
     def prepare_values_many(self, mats: Sequence,
@@ -339,10 +358,14 @@ class PSelInvEngine:
         dominates single-matrix prep amortizes across the batch (~9×
         cheaper per matrix at B=16). The serving layer's host half of
         the coalescing win."""
-        Lh, Dinv = prepare_values_many(mats, self.bs, self.nb, self.b,
-                                       self.grid.pr, self.grid.pc)
-        if dtype is not None:
-            Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        t0 = time.perf_counter()
+        with TRACER.span("engine.prepare_values_many", B=len(mats)):
+            Lh, Dinv = prepare_values_many(mats, self.bs, self.nb,
+                                           self.b, self.grid.pr,
+                                           self.grid.pc)
+            if dtype is not None:
+                Lh, Dinv = Lh.astype(dtype), Dinv.astype(dtype)
+        self._last_prepare_us = (time.perf_counter() - t0) * 1e6
         return SolveValues(Lh, Dinv)
 
     def solve(self, values, dtype=jnp.float32, *, bucket: bool = False):
@@ -375,15 +398,26 @@ class PSelInvEngine:
                 f"values must be rank 5 (single) or rank 6 (leading "
                 f"batch axis), got shape {Lh.shape}")
         self.solve_calls += 1
-        if Lh.ndim == 6 and bucket:
-            B = Lh.shape[0]
-            Bp = bucket_size(B)
-            if Bp != B:
-                pad = ((0, Bp - B),) + ((0, 0),) * (Lh.ndim - 1)
-                out = self.jitted(batched=True)(jnp.pad(Lh, pad),
-                                                jnp.pad(Dinv, pad))
-                return out[:B]
-        return self.jitted(batched=(Lh.ndim == 6))(Lh, Dinv)
+        t0 = time.perf_counter()
+        with TRACER.span("engine.solve",
+                         B=Lh.shape[0] if Lh.ndim == 6 else 1):
+            if Lh.ndim == 6 and bucket:
+                B = Lh.shape[0]
+                Bp = bucket_size(B)
+                if Bp != B:
+                    pad = ((0, Bp - B),) + ((0, 0),) * (Lh.ndim - 1)
+                    out = self.jitted(batched=True)(jnp.pad(Lh, pad),
+                                                    jnp.pad(Dinv, pad))
+                    out = out[:B]
+                else:
+                    out = self.jitted(batched=True)(Lh, Dinv)
+            else:
+                out = self.jitted(batched=(Lh.ndim == 6))(Lh, Dinv)
+        # dispatch wall, not device wall: the result stays async (the
+        # caller decides when to block), so this gauge measures host
+        # prep + jit dispatch — and trace+compile when it's a cold class
+        self._last_solve_us = (time.perf_counter() - t0) * 1e6
+        return out
 
     def solve_many(self, mats: Sequence, dtype=jnp.float32, *,
                    bucket: bool = False, batched_prep: bool = True):
@@ -465,8 +499,6 @@ class PSelInvEngine:
         the same program, so the no-retrace regression handle
         (``trace_count``) is never touched — even when solves run
         concurrently on the shared session."""
-        import time
-
         key = (batched, jnp.dtype(dtype).name,
                int(batch_size) if batched else 1)
         with self._jit_lock:
@@ -480,13 +512,15 @@ class PSelInvEngine:
         fn = jax.jit(self._shard_mapped_sweep(batched, counted=False))
         # the AOT path traces ONCE and hands back jaxpr + lowering
         t0 = time.perf_counter()
-        traced = fn.trace(sd, sd)
-        lowered = traced.lower()
+        with TRACER.span("engine.trace_lower", batched=batched):
+            traced = fn.trace(sd, sd)
+            lowered = traced.lower()
         t_lower = time.perf_counter() - t0
         jaxpr_lines = len(str(traced.jaxpr).splitlines())
         hlo_bytes = len(lowered.as_text())
         t0 = time.perf_counter()
-        compiled = lowered.compile()
+        with TRACER.span("engine.compile", batched=batched):
+            compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
         # compiled-collective census off the optimized HLO (the program
         # XLA actually runs): permute op count and per-device collective
@@ -556,6 +590,23 @@ class PSelInvEngine:
                       f"grid={self.grid.pr}x{self.grid.pc})")
         return diags
 
+    def profile_rounds(self, values, *, chunk: int = 1, reps: int = 3,
+                       dtype=jnp.float32, model=None):
+        """Measured per-round timeline of this session's sweep: re-runs
+        the overlapped schedule as per-round jitted segments with
+        ``block_until_ready`` fencing and joins the walls against the
+        plan's wire tables — residuals vs the α-β simulator, the
+        per-rank inbound skew report, and best-fit α/β estimates.
+        Returns a :class:`~repro.obs.rounds.RoundProfile`; see
+        :func:`repro.obs.rounds.profile_rounds` for the knobs
+        (``chunk`` coarsens to level-chunk segments, ``reps`` keeps the
+        per-segment minimum). The replay runs the *same* device code as
+        the fused sweep (bit-identical result, tested), so the timeline
+        is a measurement, not an estimate."""
+        from ..obs.rounds import profile_rounds
+        return profile_rounds(self, values, chunk=chunk, reps=reps,
+                              dtype=dtype, model=model)
+
     def stats(self, compile: bool = False) -> Dict[str, float]:
         """Static schedule metrics of the cached program: ppermute round
         count and peak per-device arena footprint (blocks). Stream
@@ -564,12 +615,18 @@ class PSelInvEngine:
         gated slot tables, padding included) and
         ``stream_shifts_per_round`` (mean gated permutes executed per
         comm round) — the two numbers the grid-factored encoding exists
-        to shrink. ``compile=True`` additionally reports compile metrics
-        for the f32 single-matrix shape class (:meth:`compile_stats` —
+        to shrink. The span-derived gauges ``last_solve_us`` /
+        ``prepare_us`` report the most recent solve-dispatch and host
+        value-prep walls (None until the session has solved/prepared).
+        ``compile=True`` additionally reports compile metrics for the
+        f32 single-matrix shape class (:meth:`compile_stats` —
         trace+lower / compile wall time, jaxpr line count, HLO text
         size), so the stream's compile-time/program-size win is
         inspectable straight off the session; call
-        :meth:`compile_stats` directly for a batched or non-f32 class."""
+        :meth:`compile_stats` directly for a batched or non-f32 class.
+        Every scalar reported here is also published to the global
+        metrics registry (``repro.obs.registry.REGISTRY``) under
+        ``selinv_engine_*`` — the process-wide scrape surface."""
         ex = (self.program.overlap_plan if self.options.overlap
               else self.program.exec_plan)
         cls = type(self)
@@ -582,12 +639,26 @@ class PSelInvEngine:
                "cache_engines": len(cls._cache),
                "cache_hits": cls.cache_hits,
                "cache_misses": cls.cache_misses,
-               "cache_evictions": cls.cache_evictions}
+               "cache_evictions": cls.cache_evictions,
+               "solve_calls": self.solve_calls,
+               "last_solve_us": self._last_solve_us,
+               "prepare_us": self._last_prepare_us}
         if self.options.stream:
             from .stream import stream_shifts_per_round, stream_wire_bytes
             st = self.program.stream_tables
             out["stream_wire_bytes"] = stream_wire_bytes(st, self.b)
             out["stream_shifts_per_round"] = stream_shifts_per_round(st)
         if compile:
+            # compile metrics require a live trace + XLA compile of the
+            # session's sweep when this shape class was never measured
+            # (a multi-second side effect, cached afterwards) — and a
+            # cached session can outlive the device topology it was
+            # analyzed under, so guard with the canonical device check
+            # instead of dying deep inside shard_map
+            check_grid_devices(self.grid.pr, self.grid.pc)
             out.update(self.compile_stats())
+        for k, v in out.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                REGISTRY.gauge(f"selinv_engine_{k}",
+                               "engine.stats() gauge").set(v)
         return out

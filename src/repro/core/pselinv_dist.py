@@ -154,32 +154,38 @@ def build_program(bs: BlockStructure, nb: int, b: int, pr: int, pc: int,
             "requires overlap=True")
     if nb % pr or nb % pc:
         raise ValueError(f"nb={nb} not divisible by grid {pr}x{pc}")
+    from ..obs.trace import TRACER
     from .schedule import Grid2D
-    plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
+    with TRACER.span("plan.build", nb=nb):
+        plan = build_plan(bs, Grid2D(pr, pc), kind, nb=nb)
     ov = st = None
-    if stream:
-        ov, st = schedule_stream(plan, coalesce_max=coalesce_max,
-                                 window=window, options=options)
-    elif overlap:
-        ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
-                                 window=window, options=options)
-    prog = PSelInvProgram(
-        nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
-        exec_plan=None if overlap else compile_exec(plan),
-        overlap_plan=ov, stream_tables=st)
+    with TRACER.span("plan.schedule", stream=stream, overlap=overlap):
+        if stream:
+            ov, st = schedule_stream(plan, coalesce_max=coalesce_max,
+                                     window=window, options=options)
+        elif overlap:
+            ov = schedule_overlapped(plan, coalesce_max=coalesce_max,
+                                     window=window, options=options)
+        prog = PSelInvProgram(
+            nb=nb, b=b, pr=pr, pc=pc, kind=kind, bs=bs, plan=plan,
+            exec_plan=None if overlap else compile_exec(plan),
+            overlap_plan=ov, stream_tables=st)
     if verify != "off":
         from .verify import enforce_verification, verify_program
-        enforce_verification(
-            verify_program(prog), mode=verify,
-            where=f"build_program(nb={nb}, grid={pr}x{pc}, "
-                  f"stream={stream}, overlap={overlap})")
+        with TRACER.span("plan.verify", mode=verify):
+            enforce_verification(
+                verify_program(prog), mode=verify,
+                where=f"build_program(nb={nb}, grid={pr}x{pc}, "
+                      f"stream={stream}, overlap={overlap})")
     if verify_compiled != "off":
         from .hlo_verify import lint_program
         from .verify import enforce_verification
-        enforce_verification(
-            lint_program(prog), mode=verify_compiled,
-            where=f"compiled sweep of build_program(nb={nb}, "
-                  f"grid={pr}x{pc}, stream={stream}, overlap={overlap})")
+        with TRACER.span("plan.verify_compiled", mode=verify_compiled):
+            enforce_verification(
+                lint_program(prog), mode=verify_compiled,
+                where=f"compiled sweep of build_program(nb={nb}, "
+                      f"grid={pr}x{pc}, stream={stream}, "
+                      f"overlap={overlap})")
     return prog
 
 
@@ -440,6 +446,101 @@ def _phase_diagw(arena, Dinv_f, slots, root, idx, N, base_s, dtype):
         m[:, None, None] * (newd - _gi(arena, slots)),
         mode="promise_in_bounds")
 
+# The overlapped per-device body, factored into module-level pieces so
+# the normal executor (`make_sweep_overlapped`) and the profiling replay
+# (`make_sweep_segments`, driven by ``obs.rounds``) run the *same* code:
+# the replay is the sweep cut at jit boundaries, not a re-implementation,
+# so its per-round timings measure exactly what the fused sweep executes.
+
+def _overlap_init(ov, b, Dinv_f, idx, dtype):
+    """Fresh arena + structless-supernode diagonal seeds (leaves without
+    fill + grid padding get A⁻¹(K,K) = D⁻¹ up front)."""
+    arena = jnp.zeros((ov.arena_blocks, b, b), dtype=dtype)
+    if len(ov.diag_set_root):
+        slots = jnp.asarray(ov.diag_set_slot)
+        m = (jnp.asarray(ov.diag_set_root) == idx).astype(dtype)
+        arena = arena.at[slots].add(
+            m[:, None, None] * _gi(Dinv_f, slots),
+            mode="promise_in_bounds")
+    return arena
+
+
+def _overlap_compute(ov, op, arena, Dinv_f, idx, r, c, b, dtype):
+    """One scheduled compute op at a round boundary. Numerics live in
+    the shared ``_phase_*`` helpers (one definition with the stream
+    executor); this just feeds them the level's static tables. The
+    per-device Û gather table maps the dense (k, j) lane grid onto the
+    compact recycled pool slots (trash lanes are struct-masked before
+    use)."""
+    N, nbr, nbc = ov.n_ainv, ov.nbr, ov.nbc
+    lv = ov.levels[op.level]
+    cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
+    if op.kind == "gemm":
+        ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
+        return _phase_gemm(arena, ut, cm, N, nbr, nbc, b, lv.base_p)
+    if op.kind == "write":
+        wr = jnp.take(jnp.asarray(lv.col_write_row, dtype=dtype),
+                      r, axis=0)                        # (nk, nbr)
+        wc = jnp.take(jnp.asarray(lv.col_write_col, dtype=dtype),
+                      c, axis=0)                        # (nk,)
+        return _phase_write(arena, jnp.asarray(lv.kcs), wr, wc,
+                            N, nbr, nbc, b, lv.base_p)
+    if op.kind == "scomp":
+        ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
+        rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype),
+                      r, axis=0)                        # (nk,)
+        return _phase_scomp(arena, ut, cm, jnp.asarray(lv.krs),
+                            rm, N, nbr, nbc, b, lv.base_s)
+    # "diagw":  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
+    return _phase_diagw(arena, Dinv_f, jnp.asarray(lv.diag_slot),
+                        jnp.asarray(lv.diag_root), idx, N,
+                        lv.base_s, dtype)
+
+
+def _overlap_round(ov, t, arena, Lh_f, Dinv_f, idx, r, c, b, dtype):
+    """One executed round: the boundary's pinned compute ops, the
+    owner-local lane moves, then round ``t``'s coalesced multi-lane
+    ppermute with per-lane gather/scatter/accumulate/transpose tables."""
+    for op in ov.compute_at[t]:
+        arena = _overlap_compute(ov, op, arena, Dinv_f, idx, r, c, b,
+                                 dtype)
+    rnd = ov.rounds[t]
+    if rnd.lwidth:
+        lg = jnp.take(jnp.asarray(rnd.lgather), idx, axis=0)
+        ls = jnp.take(jnp.asarray(rnd.lscatter), idx, axis=0)
+        lt = jnp.take(jnp.asarray(rnd.ltmask), idx, axis=0)
+        llh = jnp.take(jnp.asarray(rnd.lglh), idx, axis=0)
+        blks = _gather_lanes(arena, Lh_f, lg, llh, bool(rnd.lglh.any()))
+        blks = jnp.where(lt[:, None, None],
+                         jnp.swapaxes(blks, -1, -2), blks)
+        # non-participating lanes land in the trash block
+        arena = arena.at[ls].set(blks, mode="promise_in_bounds")
+    if rnd.perm:
+        g = jnp.take(jnp.asarray(rnd.gather), idx, axis=0)
+        s_ = jnp.take(jnp.asarray(rnd.scatter), idx, axis=0)
+        am = jnp.take(jnp.asarray(rnd.addm, dtype=dtype), idx, axis=0)
+        tm = jnp.take(jnp.asarray(rnd.tmask), idx, axis=0)
+        lh = jnp.take(jnp.asarray(rnd.glh), idx, axis=0)
+        payload = _gather_lanes(arena, Lh_f, g, lh, bool(rnd.glh.any()))
+        moved = lax.ppermute(payload, "xy", rnd.perm)
+        moved = jnp.where(tm[:, None, None],
+                          jnp.swapaxes(moved, -1, -2), moved)
+        cur = _gi(arena, s_)
+        arena = arena.at[s_].set(
+            moved + am[:, None, None] * cur,
+            mode="promise_in_bounds")
+    return arena
+
+
+def _overlap_finish(ov, arena, Dinv_f, idx, r, c, b, dtype):
+    """Trailing boundary compute + A⁻¹ extraction from the arena."""
+    for op in ov.compute_at[len(ov.rounds)]:
+        arena = _overlap_compute(ov, op, arena, Dinv_f, idx, r, c, b,
+                                 dtype)
+    return lax.slice_in_dim(
+        arena, 0, ov.n_ainv).reshape(ov.nbr, ov.nbc, b, b)
+
+
 def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     """Build the cross-level overlapped SPMD sweep from the compiled
     global round stream (`plan.schedule_overlapped`).
@@ -464,8 +565,7 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
     ov = prog.overlap_plan
     if ov is None:
         raise ValueError("build_program(..., overlap=True) first")
-    b, pr, pc = prog.b, prog.pr, prog.pc
-    nbr, nbc = ov.nbr, ov.nbc
+    b, pc = prog.b, prog.pc
     N = ov.n_ainv
 
     def body(Lh, Dinv):
@@ -473,85 +573,92 @@ def make_sweep_overlapped(prog: PSelInvProgram, batched: bool = False):
         r = idx // pc
         c = idx % pc
         dtype = Lh.dtype
-        arena = jnp.zeros((ov.arena_blocks, b, b), dtype=dtype)
         Lh_f = Lh.reshape(N, b, b)
         Dinv_f = Dinv.reshape(N, b, b)
-
-        def gather_lanes(g, lh_m, any_lh: bool):
-            return _gather_lanes(arena, Lh_f, g, lh_m, any_lh)
-
         # structless supernodes (leaves without fill + grid padding)
-        if len(ov.diag_set_root):
-            slots = jnp.asarray(ov.diag_set_slot)
-            m = (jnp.asarray(ov.diag_set_root) == idx).astype(dtype)
-            arena = arena.at[slots].add(
-                m[:, None, None] * _gi(Dinv_f, slots),
-                mode="promise_in_bounds")
-
-        def apply_compute(op, arena):
-            # numerics live in the shared _phase_* helpers (one
-            # definition with the stream executor); this just feeds them
-            # the level's static tables. The per-device Û gather table
-            # maps the dense (k, j) lane grid onto the compact recycled
-            # pool slots (trash lanes are struct-masked before use)
-            lv = ov.levels[op.level]
-            cm = jnp.take(jnp.asarray(lv.cmask, dtype=dtype), c, axis=0)
-            if op.kind == "gemm":
-                ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
-                return _phase_gemm(arena, ut, cm, N, nbr, nbc, b,
-                                   lv.base_p)
-            if op.kind == "write":
-                wr = jnp.take(jnp.asarray(lv.col_write_row, dtype=dtype),
-                              r, axis=0)                    # (nk, nbr)
-                wc = jnp.take(jnp.asarray(lv.col_write_col, dtype=dtype),
-                              c, axis=0)                    # (nk,)
-                return _phase_write(arena, jnp.asarray(lv.kcs), wr, wc,
-                                    N, nbr, nbc, b, lv.base_p)
-            if op.kind == "scomp":
-                ut = jnp.take(jnp.asarray(lv.u_gather), idx, axis=0)
-                rm = jnp.take(jnp.asarray(lv.diag_rowmask, dtype=dtype),
-                              r, axis=0)                    # (nk,)
-                return _phase_scomp(arena, ut, cm, jnp.asarray(lv.krs),
-                                    rm, N, nbr, nbc, b, lv.base_s)
-            # "diagw":  A⁻¹(K,K) = D⁻¹ − (Σ A⁻¹(K,I)L̂(I,K))ᵀ
-            return _phase_diagw(arena, Dinv_f, jnp.asarray(lv.diag_slot),
-                                jnp.asarray(lv.diag_root), idx, N,
-                                lv.base_s, dtype)
-
-        for t, rnd in enumerate(ov.rounds):
-            for op in ov.compute_at[t]:
-                arena = apply_compute(op, arena)
-            if rnd.lwidth:
-                lg = jnp.take(jnp.asarray(rnd.lgather), idx, axis=0)
-                ls = jnp.take(jnp.asarray(rnd.lscatter), idx, axis=0)
-                lt = jnp.take(jnp.asarray(rnd.ltmask), idx, axis=0)
-                llh = jnp.take(jnp.asarray(rnd.lglh), idx, axis=0)
-                blks = gather_lanes(lg, llh, bool(rnd.lglh.any()))
-                blks = jnp.where(lt[:, None, None],
-                                 jnp.swapaxes(blks, -1, -2), blks)
-                # non-participating lanes land in the trash block
-                arena = arena.at[ls].set(blks, mode="promise_in_bounds")
-            if rnd.perm:
-                g = jnp.take(jnp.asarray(rnd.gather), idx, axis=0)
-                s_ = jnp.take(jnp.asarray(rnd.scatter), idx, axis=0)
-                am = jnp.take(jnp.asarray(rnd.addm, dtype=dtype), idx,
-                              axis=0)
-                tm = jnp.take(jnp.asarray(rnd.tmask), idx, axis=0)
-                lh = jnp.take(jnp.asarray(rnd.glh), idx, axis=0)
-                payload = gather_lanes(g, lh, bool(rnd.glh.any()))
-                moved = lax.ppermute(payload, "xy", rnd.perm)
-                moved = jnp.where(tm[:, None, None],
-                                  jnp.swapaxes(moved, -1, -2), moved)
-                cur = _gi(arena, s_)
-                arena = arena.at[s_].set(
-                    moved + am[:, None, None] * cur,
-                    mode="promise_in_bounds")
-        for op in ov.compute_at[len(ov.rounds)]:
-            arena = apply_compute(op, arena)
-
-        return lax.slice_in_dim(arena, 0, N).reshape(nbr, nbc, b, b)
+        arena = _overlap_init(ov, b, Dinv_f, idx, dtype)
+        for t in range(len(ov.rounds)):
+            arena = _overlap_round(ov, t, arena, Lh_f, Dinv_f, idx, r, c,
+                                   b, dtype)
+        return _overlap_finish(ov, arena, Dinv_f, idx, r, c, b, dtype)
 
     return _wrap_sweep(body, batched)
+
+
+def make_sweep_segments(prog: PSelInvProgram,
+                        boundaries: Optional[Sequence[int]] = None):
+    """Profiling decomposition of the overlapped sweep: the same
+    per-device body as :func:`make_sweep_overlapped`, cut at round
+    boundaries so ``obs.rounds`` can jit, fence (``block_until_ready``)
+    and time each executed round in isolation.
+
+    Returns ``(init, steps, final)`` in the single-matrix shard_map
+    calling convention (per-device value shards ``(1, nbr, nbc, b, b)``
+    under ``in_specs=P("xy")``; the arena travels between segments as a
+    per-device ``(1, arena_blocks, b, b)`` shard):
+
+    * ``init(Lh, Dinv) -> arena`` — zeroed arena + structless-supernode
+      diagonal seeds;
+    * ``steps[i](arena, Lh, Dinv) -> arena`` — executed rounds
+      ``boundaries[i] .. boundaries[i+1])`` (each = boundary compute ops
+      + owner-local moves + the coalesced ppermute), one entry per
+      consecutive boundary pair;
+    * ``final(arena, Lh, Dinv) -> Ainv`` — the trailing boundary compute
+      + A⁻¹ extraction.
+
+    ``boundaries`` defaults to ``range(nrounds + 1)`` — one step per
+    executed round; pass a coarser monotone cut list for level-chunk
+    granularity. Running ``init``, every step in order, then ``final``
+    reproduces the fused sweep bit-for-bit: the segments call the very
+    same ``_overlap_round`` code, merely split at jit boundaries.
+    Requires an overlapped schedule (stream programs carry one too —
+    their gated tables are lowered from it)."""
+    ov = prog.overlap_plan
+    if ov is None:
+        raise ValueError("build_program(..., overlap=True) first")
+    b, pc = prog.b, prog.pc
+    N = ov.n_ainv
+    nrounds = len(ov.rounds)
+    if boundaries is None:
+        boundaries = list(range(nrounds + 1))
+    else:
+        boundaries = [int(x) for x in boundaries]
+        if (not boundaries or boundaries[0] != 0
+                or boundaries[-1] != nrounds
+                or any(a >= b_ for a, b_ in zip(boundaries,
+                                                boundaries[1:]))):
+            raise ValueError(
+                f"boundaries must be a strictly increasing cut list from "
+                f"0 to {nrounds}, got {boundaries!r}")
+
+    def _ctx(Lh, Dinv):
+        idx = lax.axis_index("xy")
+        return (idx, idx // pc, idx % pc, Lh[0].reshape(N, b, b),
+                Dinv[0].reshape(N, b, b), Lh.dtype)
+
+    def init(Lh, Dinv):
+        idx, _, _, _, Dinv_f, dtype = _ctx(Lh, Dinv)
+        return _overlap_init(ov, b, Dinv_f, idx, dtype)[None]
+
+    def _make_step(lo: int, hi: int):
+        def step(arena, Lh, Dinv):
+            idx, r, c, Lh_f, Dinv_f, dtype = _ctx(Lh, Dinv)
+            a = arena[0]
+            for t in range(lo, hi):
+                a = _overlap_round(ov, t, a, Lh_f, Dinv_f, idx, r, c, b,
+                                   dtype)
+            return a[None]
+        return step
+
+    steps = [_make_step(lo, hi)
+             for lo, hi in zip(boundaries, boundaries[1:])]
+
+    def final(arena, Lh, Dinv):
+        idx, r, c, _, Dinv_f, dtype = _ctx(Lh, Dinv)
+        return _overlap_finish(ov, arena[0], Dinv_f, idx, r, c, b,
+                               dtype)[None]
+
+    return init, steps, final
 
 
 # ---------------------------------------------------------------------------

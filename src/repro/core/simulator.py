@@ -467,27 +467,86 @@ def round_schedule_from_exec(ex: ExecPlan, plan: CommPlan) -> RoundSchedule:
                          peak_arena_blocks=peak_arena_blocks(ex))
 
 
+def _overlap_event_groups(ov: OverlappedExec, plan: CommPlan
+                          ) -> List[List[Tuple[str, object]]]:
+    """The overlapped timeline grouped per executed round: entry ``t``
+    (for ``t < nrounds``) holds boundary ``t``'s compute events followed
+    by round ``t``'s coalesced comm event; the final entry holds the
+    trailing boundary compute. Flattening the groups in order IS the
+    :func:`round_schedule_from_overlap` event list (one definition) —
+    the grouping exists so ``obs.rounds`` can join *measured* per-round
+    walls against the α-β cost of exactly the same executed round."""
+    groups: List[List[Tuple[str, object]]] = []
+    for t in range(len(ov.rounds) + 1):
+        g: List[Tuple[str, object]] = []
+        for op in ov.compute_at[t]:
+            if op.kind in ("gemm", "diagw"):
+                kind = "gemm" if op.kind == "gemm" else "diag"
+                g.append(("comp", _level_task_flops(
+                    plan, ov.levels[op.level].Ks, kind)))
+        if t < len(ov.rounds):
+            rnd = ov.rounds[t]
+            if rnd.perm:
+                g.append(("comm", [(s, d, kind, nb_)
+                                   for (s, d, kind, _lv, nb_)
+                                   in rnd.edges]))
+        groups.append(g)
+    return groups
+
+
 def round_schedule_from_overlap(ov: OverlappedExec,
                                 plan: CommPlan) -> RoundSchedule:
     """Flatten the overlapped executor: the global coalesced round
     sequence with compute ops at the boundaries the dependence scheduler
     pinned them to (GEMM flops at ``gemm`` boundaries, diagonal flops at
     ``diagw``)."""
-    events: List[Tuple[str, object]] = []
-    for t in range(len(ov.rounds) + 1):
-        for op in ov.compute_at[t]:
-            if op.kind in ("gemm", "diagw"):
-                kind = "gemm" if op.kind == "gemm" else "diag"
-                events.append(("comp", _level_task_flops(
-                    plan, ov.levels[op.level].Ks, kind)))
-        if t < len(ov.rounds):
-            rnd = ov.rounds[t]
-            if rnd.perm:
-                events.append(("comm", [(s, d, kind, nb_)
-                                        for (s, d, kind, _lv, nb_)
-                                        in rnd.edges]))
+    events = [e for g in _overlap_event_groups(ov, plan) for e in g]
     return RoundSchedule(nranks=ov.pr * ov.pc, events=events,
                          peak_arena_blocks=peak_arena_blocks(ov))
+
+
+def _event_seconds(net: "_Net", flop_rate: float, what: str,
+                   payload) -> float:
+    """Seconds one timeline event costs under the executed BSP
+    semantics — the same charging rule :func:`simulate_schedule`
+    applies: a compute boundary completes when its busiest rank does, a
+    ppermute round when its slowest pair does (coalesced lanes of one
+    pair share the latency and serialize their bytes)."""
+    if what == "comp":
+        dt = payload / flop_rate
+        return float(dt.max()) if len(dt) else 0.0
+    pair_bytes: Dict[Tuple[int, int], float] = defaultdict(float)
+    for (s, d, _kind, nb_) in payload:
+        pair_bytes[(s, d)] += nb_
+    return max((net.edge_cost(s, d, nb_)
+                for (s, d), nb_ in pair_bytes.items()), default=0.0)
+
+
+def simulated_round_times(prog_or_engine,
+                          model: NetworkModel | None = None) -> np.ndarray:
+    """Per-round α-β times of the executed overlapped stream, the
+    simulated side of the measured-vs-simulated residual join: entry
+    ``t < nrounds`` covers boundary ``t``'s compute plus round ``t``'s
+    coalesced permute, entry ``nrounds`` the trailing compute — the same
+    cut :func:`~.pselinv_dist.make_sweep_segments` applies to the device
+    program, so ``measured[t] - simulated[t]`` is a like-for-like
+    residual. Sums to ``simulate_schedule(...).total_time`` of the
+    overlapped schedule (tested). Accepts a program or engine; stream
+    programs are profiled through the overlapped schedule they were
+    lowered from (round-for-round identical, see
+    :func:`round_schedule_from_stream`)."""
+    prog = getattr(prog_or_engine, "program", prog_or_engine)
+    ov = getattr(prog, "overlap_plan", None)
+    if ov is None:
+        raise ValueError("per-round simulation needs an overlapped "
+                         "schedule — build with PlanOptions(overlap=True) "
+                         "or PlanOptions(stream=True)")
+    model = model or NetworkModel()
+    net = _Net(model, ov.pr * ov.pc)
+    flop_rate = model.gemm_gflops * 1e9
+    return np.array([sum(_event_seconds(net, flop_rate, what, payload)
+                         for what, payload in g)
+                     for g in _overlap_event_groups(ov, prog.plan)])
 
 
 def round_schedule_from_stream(st, plan: CommPlan) -> RoundSchedule:

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Deque, Dict, List, Optional, Tuple
 
-__all__ = ["RequestStatus", "SolveRequest", "BatchWindow",
+__all__ = ["RequestStatus", "SolveRequest", "Batch", "BatchWindow",
            "StructureBatcher", "ServeError", "ServerOverloaded",
            "RequestTimedOut"]
 
@@ -80,6 +80,7 @@ class SolveRequest:
     rid: int = field(default_factory=lambda: next(_rid))
     status: RequestStatus = RequestStatus.QUEUED
     submitted: float = field(default_factory=time.monotonic)
+    batched_at: Optional[float] = None
     completed: Optional[float] = None
     error: Optional[BaseException] = None
     _result: object = field(default=None, repr=False)
@@ -118,6 +119,20 @@ class SolveRequest:
         if self.completed is None:
             return None
         return self.completed - self.submitted
+
+
+class Batch(list):
+    """A flushed same-structure batch — a plain request list plus the
+    flush ``cause`` the window policy recorded (``"full"``,
+    ``"window"``, ``"pressure"`` or ``"force"``), so the serve spans and
+    metrics can attribute every executed batch to the policy leg that
+    released it."""
+
+    __slots__ = ("cause",)
+
+    def __init__(self, reqs, cause: str):
+        super().__init__(reqs)
+        self.cause = cause
 
 
 @dataclass(frozen=True)
@@ -203,17 +218,21 @@ class StructureBatcher:
         for key in list(self._q):
             # full buckets always flush
             while key in self._q and len(self._q[key]) >= w.max_batch:
-                batches.append(self._pop_chunk(key, w.max_batch))
+                batches.append(Batch(self._pop_chunk(key, w.max_batch),
+                                     "full"))
             # window expiry flushes the remainder
             if key in self._q:
                 oldest = self._q[key][0]
                 if force or (now - oldest.submitted
                              >= w.max_wait_ms * 1e-3):
-                    batches.append(self._pop_chunk(key, w.max_batch))
+                    batches.append(Batch(
+                        self._pop_chunk(key, w.max_batch),
+                        "force" if force else "window"))
 
         # queue pressure: the total backlog must not sit waiting out
         # windows — flush the fullest queues until under the bound
         while self.pending() > w.pressure:
             key = max(self._q, key=lambda k: len(self._q[k]))
-            batches.append(self._pop_chunk(key, w.max_batch))
+            batches.append(Batch(self._pop_chunk(key, w.max_batch),
+                                 "pressure"))
         return batches, expired

@@ -28,7 +28,7 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from ..core.engine import (Grid, PlanOptions, PSelInvEngine, SolveValues,
                            bucket_size, stack_values)
 from ..core.pselinv_dist import check_values_pattern
+from ..obs.trace import TRACER
 from .batcher import (BatchWindow, RequestStatus, RequestTimedOut,
                       ServeError, ServerOverloaded, SolveRequest,
                       StructureBatcher)
@@ -98,6 +99,8 @@ class SelInvServer:
         self._buckets_used: Dict[str, Set[int]] = {}
         self._thread: Optional[threading.Thread] = None
         self._running = False
+        # bounded lifecycle history for the Chrome-trace exporter
+        self._history: "deque[SolveRequest]" = deque(maxlen=4096)
 
     # ---- engine lookup ------------------------------------------------
     def engine_for(self, A) -> PSelInvEngine:
@@ -120,17 +123,22 @@ class SelInvServer:
 
     # ---- submission ---------------------------------------------------
     def _admit(self, req: SolveRequest) -> SolveRequest:
-        with self._cond:
-            if self._batcher.pending() >= self.cfg.max_queue:
-                self.metrics.inc("rejected")
-                req._finish(RequestStatus.REJECTED,
-                            error=ServerOverloaded(
-                                f"queue at capacity "
-                                f"({self.cfg.max_queue} pending)"))
-                return req
-            self._batcher.add(req)
-            self.metrics.set_queue_depth(self._batcher.pending())
-            self._cond.notify()
+        with TRACER.span("serve.admission", rid=req.rid,
+                         skey=req.skey[:12]) as sp:
+            with self._cond:
+                if self._batcher.pending() >= self.cfg.max_queue:
+                    self.metrics.inc("rejected")
+                    sp.set(outcome="rejected")
+                    req._finish(RequestStatus.REJECTED,
+                                error=ServerOverloaded(
+                                    f"queue at capacity "
+                                    f"({self.cfg.max_queue} pending)"))
+                    return req
+                self._batcher.add(req)
+                sp.set(outcome="queued",
+                       queue_depth=self._batcher.pending())
+                self.metrics.set_queue_depth(self._batcher.pending())
+                self._cond.notify()
         return req
 
     def submit(self, A, timeout_ms: Optional[float] = None
@@ -177,44 +185,51 @@ class SelInvServer:
         per-request pattern failures and whole-batch solve failures
         land on the affected requests as FAILED."""
         eng = self._engines[reqs[0].skey]
+        cause = getattr(reqs, "cause", None)
+        now = time.monotonic()
         for r in reqs:
             r.status = RequestStatus.BATCHED
+            r.batched_at = now
 
-        # per-request admission of the *values* against the claimed
-        # structure: a matrix whose pattern escapes it fails alone
-        live: List[SolveRequest] = []
-        for r in reqs:
-            if r.matrix is not None:
-                try:
-                    check_values_pattern(r.matrix, eng.bs, eng.b)
-                except ValueError as e:
+        with TRACER.span("serve.batch", skey=reqs[0].skey[:12],
+                         n=len(reqs), cause=cause or "?") as sp:
+            # per-request admission of the *values* against the claimed
+            # structure: a matrix whose pattern escapes it fails alone
+            live: List[SolveRequest] = []
+            for r in reqs:
+                if r.matrix is not None:
+                    try:
+                        check_values_pattern(r.matrix, eng.bs, eng.b)
+                    except ValueError as e:
+                        self.metrics.inc("failed")
+                        r._finish(RequestStatus.FAILED, error=ServeError(
+                            f"request {r.rid}: {e}"))
+                        continue
+                live.append(r)
+            self._remember(reqs)
+            if not live:
+                return
+
+            try:
+                vals = self._prepare(eng, live)
+                B = vals.Lh.shape[0]
+                bkt = bucket_size(B) if self.cfg.bucket else B
+                sp.set(B=B, bucket=bkt)
+                # one device→host gather for the whole batch: per-request
+                # jax-array slicing would dispatch a gather op per request
+                # (measured ~3 ms each — more than the solve itself)
+                out = np.asarray(self._execute(eng, vals, B, bkt))
+                self.metrics.observe_batch(B, bkt, cause=cause)
+                self._buckets_used.setdefault(reqs[0].skey, set()).add(bkt)
+                for i, r in enumerate(live):
+                    self.metrics.inc("solved")
+                    r._finish(RequestStatus.SOLVED, result=out[i])
+                    self.metrics.observe_latency(r.latency_s)
+            except Exception as e:               # noqa: BLE001 — isolate
+                for r in live:
                     self.metrics.inc("failed")
                     r._finish(RequestStatus.FAILED, error=ServeError(
-                        f"request {r.rid}: {e}"))
-                    continue
-            live.append(r)
-        if not live:
-            return
-
-        try:
-            vals = self._prepare(eng, live)
-            B = vals.Lh.shape[0]
-            bkt = bucket_size(B) if self.cfg.bucket else B
-            # one device→host gather for the whole batch: per-request
-            # jax-array slicing would dispatch a gather op per request
-            # (measured ~3 ms each — more than the solve itself)
-            out = np.asarray(self._execute(eng, vals, B, bkt))
-            self.metrics.observe_batch(B, bkt)
-            self._buckets_used.setdefault(reqs[0].skey, set()).add(bkt)
-            for i, r in enumerate(live):
-                self.metrics.inc("solved")
-                r._finish(RequestStatus.SOLVED, result=out[i])
-                self.metrics.observe_latency(r.latency_s)
-        except Exception as e:               # noqa: BLE001 — isolate
-            for r in live:
-                self.metrics.inc("failed")
-                r._finish(RequestStatus.FAILED, error=ServeError(
-                    f"batch of {len(live)} failed: {e}"))
+                        f"batch of {len(live)} failed: {e}"))
 
     def _prepare(self, eng: PSelInvEngine,
                  reqs: List[SolveRequest]) -> SolveValues:
@@ -352,6 +367,16 @@ class SelInvServer:
                 self._cond.notify_all()       # wake drain() waiters
 
     # ---- observability ------------------------------------------------
+    def _remember(self, reqs: List[SolveRequest]) -> None:
+        with self._cond:
+            self._history.extend(reqs)
+
+    def recent_requests(self) -> List[SolveRequest]:
+        """The most recent served requests (bounded window), for
+        :func:`repro.obs.export.chrome_trace` lifecycle lanes."""
+        with self._cond:
+            return list(self._history)
+
     def stats(self) -> Dict:
         """One coherent serving snapshot: request/latency/occupancy
         metrics, queue depth, per-structure compiled-bucket census, the

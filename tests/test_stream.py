@@ -543,13 +543,15 @@ def test_stream_engine_session_end_to_end():
         # demand
         cache_keys = {"table_bytes", "cache_engines", "cache_hits",
                       "cache_misses", "cache_evictions"}
+        gauge_keys = {"solve_calls", "last_solve_us", "prepare_us"}
         s = eng.stats()
         assert set(s) == {"ppermute_rounds", "peak_arena_blocks",
                           "stream_wire_bytes",
-                          "stream_shifts_per_round"} | cache_keys
+                          "stream_shifts_per_round"} \
+            | cache_keys | gauge_keys
         sb = base.stats()
         assert set(sb) == {"ppermute_rounds",
-                           "peak_arena_blocks"} | cache_keys
+                           "peak_arena_blocks"} | cache_keys | gauge_keys
         for k in ("ppermute_rounds", "peak_arena_blocks"):
             assert s[k] == sb[k]       # same schedule, same arena
         assert s["stream_wire_bytes"] > 0

@@ -58,6 +58,54 @@ def validate_history(hist) -> None:
         validate_rows(entry.get("benches", []), where=f"rev {rev}")
 
 
+def preflight_pycache() -> None:
+    """Hygiene gate before a recording run: ``.gitignore`` must cover
+    bytecode caches, none may be git-tracked, and stray ones in the
+    working tree are swept (they regenerate; a stale ``.pyc`` shadowing
+    an edited module is exactly the artifact a perf trajectory must not
+    measure)."""
+    import shutil
+
+    gi = os.path.join(ROOT, ".gitignore")
+    patterns = set()
+    if os.path.exists(gi):
+        with open(gi) as f:
+            patterns = {ln.strip() for ln in f}
+    missing = {"__pycache__/", "*.pyc"} - patterns
+    if missing:
+        raise SystemExit(f"[bench] .gitignore does not cover "
+                         f"{sorted(missing)} — add the pattern(s) before "
+                         f"recording")
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files", "--", "*.pyc", "**/__pycache__/**"],
+            cwd=ROOT, capture_output=True, text=True,
+            check=True).stdout.split()
+    except Exception:
+        tracked = []
+    if tracked:
+        raise SystemExit(f"[bench] bytecode artifacts are git-tracked: "
+                         f"{tracked[:5]} — `git rm --cached` them first")
+    swept = 0
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        if ".git" in dirnames:
+            dirnames.remove(".git")
+        if "__pycache__" in dirnames:
+            shutil.rmtree(os.path.join(dirpath, "__pycache__"),
+                          ignore_errors=True)
+            dirnames.remove("__pycache__")
+            swept += 1
+        for fn in filenames:
+            if fn.endswith(".pyc"):
+                try:
+                    os.unlink(os.path.join(dirpath, fn))
+                    swept += 1
+                except OSError:
+                    pass
+    if swept:
+        print(f"[bench] preflight swept {swept} bytecode cache artifact(s)")
+
+
 def git_rev() -> str:
     try:
         return subprocess.run(
@@ -78,6 +126,7 @@ def main() -> None:
                     default=os.path.join(ROOT, "BENCH_pselinv.json"))
     args = ap.parse_args()
 
+    preflight_pycache()
     fd, tmp = tempfile.mkstemp(suffix=".json")
     os.close(fd)
     env = dict(os.environ)
@@ -124,7 +173,12 @@ def main() -> None:
                    # latency, throughput and bucket occupancy
                    "selinv/serve_p50_us",
                    "selinv/serve_throughput_rps",
-                   "selinv/serve_batch_occupancy"})
+                   "selinv/serve_batch_occupancy",
+                   # the SweepScope scorecard (PR 10): tracing tax on
+                   # the solve hot path + measured round timeline
+                   "selinv/trace_overhead_pct",
+                   "selinv/round_p95_us",
+                   "selinv/inbound_skew_ratio"})
         missing = sorted(need - names)
         if missing:
             raise SystemExit(
